@@ -1,0 +1,60 @@
+"""Kernel micro-benches: the pure-jnp oracles timed on CPU (wall time here is a CPU
+number — the TPU story is the §Roofline analysis), plus interpreter-mode runs of the
+Pallas kernels to keep their schedule exercised end-to-end."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import flash_attention, hash_partition, merge_join_counts, ssd_chunk
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+
+    a = jnp.asarray(np.sort(rng.integers(0, 10_000, 4096).astype(np.int32)))
+    b = jnp.asarray(np.sort(rng.integers(0, 10_000, 16_384).astype(np.int32)))
+    us = _time(lambda a, b: merge_join_counts(a, b, use_pallas=False), a, b)
+    report("kernels/merge_join/ref_4k_16k", us, "jnp searchsorted oracle")
+    us = _time(lambda a, b: merge_join_counts(a, b, use_pallas=True), a, b)
+    report("kernels/merge_join/pallas_interp_4k_16k", us, "interpret=True (CPU)")
+
+    keys = jnp.asarray(rng.integers(0, 2**62, 1 << 14).astype(np.int64))
+    us = _time(lambda k: hash_partition(k, 64, use_pallas=False), keys)
+    report("kernels/hash_partition/ref_16k_p64", us, "jnp oracle")
+    us = _time(lambda k: hash_partition(k, 64, use_pallas=True), keys)
+    report("kernels/hash_partition/pallas_interp_16k_p64", us, "interpret=True (CPU)")
+
+    bh, s, p, n = 4, 512, 64, 128
+    args = (
+        jnp.asarray(rng.normal(size=(bh, s, p)).astype(np.float32)),
+        jnp.asarray(rng.uniform(0.01, 0.2, size=(bh, s)).astype(np.float32)),
+        jnp.asarray(-rng.uniform(0.5, 2.0, size=(bh,)).astype(np.float32)),
+        jnp.asarray(rng.normal(size=(bh, s, n)).astype(np.float32)),
+        jnp.asarray(rng.normal(size=(bh, s, n)).astype(np.float32)),
+    )
+    us = _time(lambda *a: ssd_chunk(*a, chunk=64, use_pallas=False), *args)
+    report("kernels/ssd/ref_bh4_s512", us, "jnp chunked oracle")
+    us = _time(lambda *a: ssd_chunk(*a, chunk=64, use_pallas=True), *args)
+    report("kernels/ssd/pallas_interp_bh4_s512", us, "interpret=True (CPU)")
+
+    q = jnp.asarray(rng.normal(size=(4, 512, 64)).astype(np.float32))
+    kk = jnp.asarray(rng.normal(size=(4, 512, 64)).astype(np.float32))
+    vv = jnp.asarray(rng.normal(size=(4, 512, 64)).astype(np.float32))
+    us = _time(lambda a, b, c: flash_attention(a, b, c, use_pallas=False), q, kk, vv)
+    report("kernels/flash_attn/ref_bh4_s512_d64", us, "jnp softmax oracle")
+    us = _time(lambda a, b, c: flash_attention(a, b, c, use_pallas=True), q, kk, vv)
+    report("kernels/flash_attn/pallas_interp_bh4_s512_d64", us, "interpret=True (CPU)")

@@ -1,0 +1,30 @@
+"""§Roofline source: reads the dry-run artifacts and emits one row per cell
+(arch × shape × mesh × variant) — three terms, bottleneck, useful-FLOPs fraction."""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run(report):
+    for f in sorted(glob.glob(str(ART / "*.json"))):
+        d = json.load(open(f))
+        tag = f"roofline/{d['arch']}/{d['shape']}/{'pod2' if d['multi_pod'] else 'pod1'}/{d.get('variant','baseline')}"
+        if d["status"] == "skipped":
+            report(tag, 0.0, f"SKIPPED: {d['reason']}")
+            continue
+        if d["status"] != "ok":
+            report(tag, 0.0, f"ERROR: {d.get('error','?')[:80]}")
+            continue
+        r = d["roofline"]
+        report(
+            tag,
+            d["compile_s"] * 1e6,
+            f"bottleneck={r['bottleneck']} t_c={r['t_compute_s']:.4f}s "
+            f"t_m={r['t_memory_s']:.4f}s t_x={r['t_collective_s']:.4f}s "
+            f"useful={d['useful_flops_fraction']:.3f} chips={d['n_chips']}",
+        )

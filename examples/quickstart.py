@@ -1,0 +1,51 @@
+"""Quickstart: evaluate a skewed triangle join with the Theorem 6.2 MPC engine and
+compare its metered load against the paper's bound and the one-round baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.hypergraph import fractional_edge_cover, quasi_packing_number
+from repro.core.query import JoinQuery, Relation, reference_join
+from repro.mpc.engine import mpc_join
+from repro.mpc.hypercube import skewfree_hypercube_join, uniform_lp_shares
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, p = 2000, 27
+
+    # A triangle query with a heavy hub value on attribute A.
+    ab = np.stack([np.zeros(n, np.int64), np.arange(n)], axis=1)
+    ac = np.stack([np.zeros(n, np.int64), np.arange(n)], axis=1)
+    bc = np.stack([rng.integers(0, n, n), rng.integers(0, n, n)], axis=1)
+    query = JoinQuery.make(
+        [
+            Relation.make(("A", "B"), ab),
+            Relation.make(("B", "C"), bc),
+            Relation.make(("A", "C"), ac),
+        ]
+    )
+    g = query.hypergraph
+    rho, cover = fractional_edge_cover(g)
+    psi = quasi_packing_number(g)
+    print(f"query: triangle, m={query.m}; ρ={rho} (multi-round bound m/p^{{1/ρ}}), "
+          f"ψ={psi} (one-round bound m/p^{{1/ψ}})")
+
+    res = mpc_join(query, p=p, lam=8, materialize=True)
+    oracle = reference_join(query)
+    assert set(map(tuple, res.rows.tolist())) == oracle.rows_as_set()
+    print(f"[engine] |Join| = {res.count} (matches oracle), "
+          f"load = {res.load} words vs bound m/p^(1/ρ) = {res.bound:.0f} "
+          f"(ratio {res.load_ratio:.1f})")
+    print("         per-round loads:", res.sim.merged_round_loads())
+
+    shares = uniform_lp_shares(g, p)
+    sim, cnt, _ = skewfree_hypercube_join(query, shares, p=p, materialize=False)
+    print(f"[one-round HC] load = {sim.max_round_load} words "
+          f"(skew concentrates on the hub's hash cells — the paper's motivation)")
+
+
+if __name__ == "__main__":
+    main()

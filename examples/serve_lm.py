@@ -1,0 +1,25 @@
+"""Batched serving demo: prefill a batch of prompts and decode with the KV-cache /
+SSM-state serve step (greedy).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch h2o-danube-1.8b]
+"""
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    serve_mod.main([
+        "--arch", args.arch, "--reduced",
+        "--batch", str(args.batch), "--prompt-len", "64", "--gen", str(args.gen),
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Subgraph enumeration via the join engine (paper Sec. 1.4): count triangles and
+4-cycles of a random power-law graph by reducing to a simple binary join.
+
+Reduction: give the pattern's vertices distinct attributes; every pattern edge becomes
+a relation holding the (oriented) data edges. Load: Õ(|E|/p^{1/ρ(pattern)}).
+
+    PYTHONPATH=src python examples/subgraph_enumeration.py
+"""
+
+import numpy as np
+
+from repro.core.hypergraph import fractional_edge_cover
+from repro.core.query import JoinQuery, Relation
+from repro.mpc.engine import mpc_join
+
+
+def powerlaw_graph(rng, n_nodes: int, n_edges: int):
+    # preferential-attachment-ish: endpoint sampled ∝ rank^-0.8
+    ranks = np.arange(1, n_nodes + 1, dtype=np.float64) ** -0.8
+    probs = ranks / ranks.sum()
+    u = rng.choice(n_nodes, n_edges, p=probs)
+    v = rng.choice(n_nodes, n_edges, p=probs)
+    mask = u != v
+    edges = np.unique(np.stack([u[mask], v[mask]], axis=1), axis=0)
+    return edges
+
+
+def enumerate_pattern(edges: np.ndarray, pattern: list[tuple[str, str]], p: int):
+    """Each pattern edge gets the symmetrized data edges (both orientations)."""
+    sym = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    rels = [Relation.make(e, sym) for e in pattern]
+    q = JoinQuery.make(rels)
+    rho = float(fractional_edge_cover(q.hypergraph)[0])
+    res = mpc_join(q, p=p, lam=8, materialize=False)
+    return res, rho
+
+
+def main():
+    rng = np.random.default_rng(1)
+    edges = powerlaw_graph(rng, n_nodes=300, n_edges=1500)
+    p = 16
+    print(f"graph: |V|≤300 |E|={len(edges)} (symmetrized {2*len(edges)}), p={p}")
+
+    tri, rho = enumerate_pattern(edges, [("A", "B"), ("B", "C"), ("A", "C")], p)
+    # each triangle appears 3! = 6 times (ordered embeddings)
+    print(f"[triangle] ρ={rho}: embeddings={tri.count} → triangles={tri.count // 6}, "
+          f"load={tri.load} vs bound {tri.bound:.0f}")
+
+    cyc, rho4 = enumerate_pattern(
+        edges, [("A", "B"), ("B", "C"), ("C", "D"), ("A", "D")], p
+    )
+    # ordered 4-cycle embeddings count each cycle 8 times (4 rotations × 2 reflections)
+    print(f"[4-cycle ] ρ={rho4}: embeddings={cyc.count} → 4-cycles≈{cyc.count // 8}, "
+          f"load={cyc.load} vs bound {cyc.bound:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Scan-body probes: trip-count-corrected HLO costs.
+
+XLA's HloCostAnalysis visits each instruction once — a `lax.scan` body (and the
+collectives inside it) is counted a single time no matter the trip count (verified
+empirically; see EXPERIMENTS §Roofline methodology). The dry-run therefore lowers, per
+cell, a standalone *body probe* — one pattern-group application with the same shapes,
+shardings, remat policy, and (for train) its VJP — and reports
+
+    total_X = module_X + Σ_probes (R_probe - 1) · probe_X ,  X ∈ {flops, bytes, coll}
+
+which is exact up to boundary fusion effects. Probes per cell: the decoder pattern
+group (R = cfg.n_repeats) and, for enc-dec archs, the encoder block (R = n_enc_layers).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, BlockSpec, ShapeSpec
+from ..distributed.specs import to_shardings
+from ..models.model import _block_apply, _block_decode, _remat_wrap
+from .roofline import collective_bytes
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _strip_stack(tree):
+    return jax.tree.map(lambda l: _sds(l.shape[1:], l.dtype), tree)
+
+
+def _strip_stack_specs(spec_tree):
+    from jax.sharding import PartitionSpec as P
+
+    return jax.tree.map(
+        lambda s: P(*s[1:]) if len(s) >= 1 else s,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def _cost_triple(lowered) -> Dict[str, float]:
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+
+    def get(key):
+        try:
+            return float(cost.get(key, 0.0))
+        except Exception:
+            return 0.0
+
+    return {
+        "flops": get("flops"),
+        "bytes": get("bytes accessed"),
+        "coll_bytes": float(coll["total_bytes"]),
+    }
+
+
+def probe_costs(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    kind: str,
+    mesh,
+    axes,
+    params_sds,
+    p_specs,
+    cache_sds=None,
+    cache_specs=None,
+) -> List[Tuple[int, Dict[str, float]]]:
+    """Returns [(extra_repeats, {flops, bytes, coll_bytes}), ...] — lowered under the
+    ambient mesh/axes context the caller has installed."""
+    out: List[Tuple[int, Dict[str, float]]] = []
+    dt = jnp.dtype(cfg.dtype)
+    b = shape.batch
+    s_total = shape.seq
+    d = cfg.d_model
+
+    group_sds = _strip_stack(params_sds["blocks"])
+    group_specs = _strip_stack_specs(p_specs["blocks"])
+    group_sh = to_shardings(group_specs, mesh)
+
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = axes.data if len(axes.data) > 1 else axes.data[0]
+    dp_size = int(np.prod([mesh.shape[a] for a in axes.data]))
+    dp_ok = b % dp_size == 0
+    x_spec = P(dp if dp_ok else None, None, None)
+    x_sh = NamedSharding(mesh, x_spec)
+
+    enc_inputs = ()
+    enc_sh = ()
+    if cfg.is_encdec:
+        enc_inputs = (_sds((b, cfg.n_frontend, d), dt),)
+        enc_sh = (x_sh,)
+
+    if kind in ("train", "prefill"):
+        x_sds = _sds((b, s_total, d), dt)
+
+        def group_fwd(x, gp, *enc):
+            positions = jnp.arange(x.shape[1])[None, :]
+            enc_out = enc[0] if enc else None
+            enc_pos = (
+                jnp.arange(enc[0].shape[1])[None, :] if enc else None
+            )
+            for i, spec in enumerate(cfg.pattern):
+                x, _ = _block_apply(
+                    cfg, spec, gp[f"pos{i}"], x, positions,
+                    enc_out=enc_out, enc_positions=enc_pos,
+                )
+            return x
+
+        if kind == "train":
+            wrapped = _remat_wrap(cfg, group_fwd)
+
+            def probe(x, ybar, gp, *enc):
+                y, vjp = jax.vjp(lambda xx, pp: wrapped(xx, pp, *enc), x, gp)
+                return vjp(ybar)
+
+            lowered = jax.jit(
+                probe, in_shardings=(x_sh, x_sh, group_sh) + enc_sh
+            ).lower(x_sds, x_sds, group_sds, *enc_inputs)
+        else:
+            lowered = jax.jit(
+                group_fwd, in_shardings=(x_sh, group_sh) + enc_sh
+            ).lower(x_sds, group_sds, *enc_inputs)
+        out.append((cfg.n_repeats - 1, _cost_triple(lowered)))
+
+        if cfg.is_encdec and cfg.n_enc_layers > 1:
+            enc_spec_blk = BlockSpec(mixer="attn", window=0)
+            enc_blk_sds = _strip_stack(params_sds["encoder"]["blocks"])
+            enc_blk_specs = _strip_stack_specs(p_specs["encoder"]["blocks"])
+            enc_blk_sh = to_shardings(enc_blk_specs, mesh)
+            xe_sds = _sds((b, cfg.n_frontend, d), dt)
+
+            def enc_fwd(x, bp):
+                positions = jnp.arange(x.shape[1])[None, :]
+                y, _ = _block_apply(cfg, enc_spec_blk, bp, x, positions, causal=False)
+                return y
+
+            if kind == "train":
+                wrapped_e = _remat_wrap(cfg, enc_fwd)
+
+                def probe_e(x, ybar, bp):
+                    y, vjp = jax.vjp(wrapped_e, x, bp)
+                    return vjp(ybar)
+
+                lowered = jax.jit(
+                    probe_e, in_shardings=(x_sh, x_sh, enc_blk_sh)
+                ).lower(xe_sds, xe_sds, enc_blk_sds)
+            else:
+                lowered = jax.jit(enc_fwd, in_shardings=(x_sh, enc_blk_sh)).lower(
+                    xe_sds, enc_blk_sds
+                )
+            out.append((cfg.n_enc_layers - 1, _cost_triple(lowered)))
+        return out
+
+    # decode: one-token pass through one pattern group with its cache slice
+    x_sds = _sds((b, 1, d), dt)
+    cache_grp_sds = _strip_stack(cache_sds["blocks"])
+    cache_grp_specs = _strip_stack_specs(cache_specs["blocks"])
+    cache_grp_sh = to_shardings(cache_grp_specs, mesh)
+    x1_sh = NamedSharding(mesh, P(dp if dp_ok else None, None, None))
+
+    def dec_group(x, gp, gc, *enc):
+        pos = jnp.array(s_total - 1, jnp.int32)
+        enc_out = enc[0] if enc else None
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, c2 = _block_decode(cfg, spec, gp[f"pos{i}"], gc[f"pos{i}"], x, pos, enc_out)
+            new_cache[f"pos{i}"] = c2
+        return x, new_cache
+
+    lowered = jax.jit(
+        dec_group, in_shardings=(x1_sh, group_sh, cache_grp_sh) + enc_sh
+    ).lower(x_sds, group_sds, cache_grp_sds, *enc_inputs)
+    out.append((cfg.n_repeats - 1, _cost_triple(lowered)))
+    return out

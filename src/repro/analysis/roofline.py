@@ -1,0 +1,114 @@
+"""Roofline terms from a compiled (AOT) step.
+
+  compute  = FLOPs_dev / peak_flops         (197 TFLOP/s bf16 per TPU v5e chip)
+  memory   = Bytes_dev / hbm_bw             (819 GB/s HBM per chip)
+  collective = CollBytes_dev / link_bw      (~50 GB/s/link ICI)
+
+``cost_analysis()`` is per-device for an SPMD module (chips × per-device = global).
+collective_bytes sums the *result* operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute in the compiled HLO — a serial-sum
+convention (no overlap credit), i.e. an upper bound on ICI time; the same convention
+is applied to baseline and optimized variants so deltas are meaningful.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# result shapes appear left of ` = ... <op>(`; handles tuple results
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\w+\[[^\]]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result bytes (per device) + op counts. ``-start`` ops counted once
+    (their ``-done`` twin carries no payload of its own)."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shape_str)
+        counts[op] += 1
+    return {**{f"{k}_bytes": v for k, v in out.items()},
+            **{f"{k}_count": v for k, v in counts.items()},
+            "total_bytes": sum(out.values())}
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e-class chip (targets per assignment)."""
+
+    peak_flops: float = 197e12    # bf16
+    hbm_bw: float = 819e9         # B/s
+    link_bw: float = 50e9         # B/s per ICI link
+
+
+def roofline_terms(
+    flops_dev: float,
+    bytes_dev: float,
+    coll_bytes_dev: float,
+    hw: HW = HW(),
+) -> Dict[str, float]:
+    t_c = flops_dev / hw.peak_flops
+    t_m = bytes_dev / hw.hbm_bw
+    t_x = coll_bytes_dev / hw.link_bw
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    return {
+        "t_compute_s": t_c,
+        "t_memory_s": t_m,
+        "t_collective_s": t_x,
+        "bottleneck": dom[0],
+        "t_bound_s": dom[1],
+    }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS: 6·N·D (dense) / 6·N_active·D (MoE) per step; decode: D = batch
+    tokens (one step)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.batch

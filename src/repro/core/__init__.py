@@ -1,0 +1,17 @@
+# The paper's primary contribution — planner-side machinery of the MPC join:
+# hypergraph LPs (Sec. 2), heavy/light taxonomy (Sec. 4), semi-join reduction (Sec. 5.2),
+# isolated cartesian product accounting (Sec. 5.3-5.5), machine allocation (Sec. 6).
+# The execution substrates live in repro.mpc (exact-cost simulator) and repro.dataplane
+# (JAX shard_map data plane).
+from .hypergraph import (
+    Hypergraph,
+    fractional_edge_cover,
+    fractional_edge_packing,
+    quasi_packing_number,
+    rho,
+    tau,
+    zero_one_packing,
+)
+from .query import JoinQuery, Relation, reference_join, random_query, pattern_edges
+from .taxonomy import HeavyStats, compute_stats, configurations, plan_for_h
+from .planner import heavy_parameter

@@ -1,0 +1,222 @@
+"""Relations, join queries, and a reference (oracle) join evaluator.
+
+Data model (paper Sec. 1.1): a relation is a set of tuples over a 2-attribute scheme;
+values live in **dom** (encoded as int64 words). A simple binary query is a set of
+binary relations with pairwise-distinct schemes.
+
+The oracle ``reference_join`` computes Join(Q) exactly by pairwise hash joins over an
+order that prefers connected relations (cartesian products only when the remainder is
+disconnected). It is intended for validation on test-sized inputs, not for scale — the
+scalable path is the MPC engine itself.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .hypergraph import Edge, Hypergraph
+
+Attr = str
+
+
+def _dedup_rows(a: np.ndarray) -> np.ndarray:
+    if a.size == 0:
+        return a
+    return np.unique(a, axis=0)
+
+
+@dataclass(frozen=True)
+class Relation:
+    """A binary (or unary) relation with named attributes.
+
+    ``data`` has shape (n, arity); column j holds values of ``scheme[j]``.
+    Tuples are sets — constructors dedup rows.
+    """
+
+    scheme: Tuple[Attr, ...]
+    data: np.ndarray
+
+    @staticmethod
+    def make(scheme: Sequence[Attr], data: np.ndarray) -> "Relation":
+        scheme = tuple(scheme)
+        data = np.asarray(data, dtype=np.int64).reshape(-1, len(scheme))
+        if len(set(scheme)) != len(scheme):
+            raise ValueError(f"duplicate attribute in scheme {scheme}")
+        return Relation(scheme=scheme, data=_dedup_rows(data))
+
+    @property
+    def arity(self) -> int:
+        return len(self.scheme)
+
+    @property
+    def edge(self) -> Edge:
+        return frozenset(self.scheme)
+
+    def __len__(self) -> int:
+        return int(self.data.shape[0])
+
+    def column(self, attr: Attr) -> np.ndarray:
+        return self.data[:, self.scheme.index(attr)]
+
+    def project(self, attrs: Sequence[Attr]) -> "Relation":
+        idx = [self.scheme.index(a) for a in attrs]
+        return Relation.make(tuple(attrs), self.data[:, idx])
+
+    def rows_as_set(self) -> set:
+        return set(map(tuple, self.data.tolist()))
+
+
+@dataclass(frozen=True)
+class JoinQuery:
+    """A simple binary join query: relations with pairwise-distinct binary schemes."""
+
+    relations: Tuple[Relation, ...]
+
+    @staticmethod
+    def make(relations: Sequence[Relation]) -> "JoinQuery":
+        rels = tuple(relations)
+        schemes = [r.edge for r in rels]
+        if len(set(schemes)) != len(schemes):
+            raise ValueError("query is not simple: duplicate schemes")
+        for r in rels:
+            if r.arity != 2:
+                raise ValueError("simple binary query requires binary relations")
+        return JoinQuery(relations=rels)
+
+    @property
+    def attset(self) -> Tuple[Attr, ...]:
+        return tuple(sorted({a for r in self.relations for a in r.scheme}))
+
+    @property
+    def m(self) -> int:
+        return sum(len(r) for r in self.relations)
+
+    @property
+    def hypergraph(self) -> Hypergraph:
+        return Hypergraph.from_edges([r.edge for r in self.relations])
+
+    def relation_for(self, e: Edge) -> Relation:
+        for r in self.relations:
+            if r.edge == frozenset(e):
+                return r
+        raise KeyError(e)
+
+
+# ---------------------------------------------------------------------------
+# Reference evaluator (oracle)
+# ---------------------------------------------------------------------------
+
+
+def _hash_join(a_scheme: Tuple[Attr, ...], a: np.ndarray, b_rel: Relation):
+    """Join intermediate (a_scheme, a) with b_rel; returns (scheme, rows)."""
+    common = [x for x in a_scheme if x in b_rel.scheme]
+    b_new = [x for x in b_rel.scheme if x not in a_scheme]
+    out_scheme = tuple(a_scheme) + tuple(b_new)
+    if a.shape[0] == 0 or len(b_rel) == 0:
+        return out_scheme, np.zeros((0, len(out_scheme)), dtype=np.int64)
+
+    if not common:  # cartesian product
+        na, nb = a.shape[0], len(b_rel)
+        left = np.repeat(a, nb, axis=0)
+        right = np.tile(b_rel.data, (na, 1))
+        return out_scheme, np.concatenate([left, right], axis=1)
+
+    b_key_cols = [b_rel.scheme.index(x) for x in common]
+    b_new_cols = [b_rel.scheme.index(x) for x in b_new]
+    index: Dict[tuple, List[int]] = {}
+    for i, row in enumerate(b_rel.data):
+        index.setdefault(tuple(row[b_key_cols].tolist()), []).append(i)
+
+    a_key_cols = [a_scheme.index(x) for x in common]
+    out_rows = []
+    for row in a:
+        key = tuple(row[a_key_cols].tolist())
+        for i in index.get(key, ()):
+            if b_new_cols:
+                out_rows.append(np.concatenate([row, b_rel.data[i, b_new_cols]]))
+            else:
+                out_rows.append(row.copy())
+    if not out_rows:
+        return out_scheme, np.zeros((0, len(out_scheme)), dtype=np.int64)
+    return out_scheme, np.stack(out_rows)
+
+
+def reference_join(query: JoinQuery) -> Relation:
+    """Exact Join(Q) over sorted(attset) — the correctness oracle."""
+    rels = list(query.relations)
+    if not rels:
+        raise ValueError("empty query")
+    # Greedy connected order: start from the smallest relation, prefer joins that share
+    # an attribute with the current intermediate (defer cartesian products).
+    rels.sort(key=len)
+    first = rels.pop(0)
+    scheme, rows = first.scheme, first.data
+    while rels:
+        j = next(
+            (i for i, r in enumerate(rels) if set(r.scheme) & set(scheme)),
+            0,
+        )
+        scheme, rows = _hash_join(scheme, rows, rels.pop(j))
+    out_attrs = query.attset
+    perm = [scheme.index(a) for a in out_attrs]
+    return Relation.make(out_attrs, rows[:, perm] if rows.size else rows.reshape(0, len(perm)))
+
+
+# ---------------------------------------------------------------------------
+# Query/data generators (shared by tests + benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def query_from_pattern(edges: Sequence[Tuple[Attr, Attr]], tables: Dict[Tuple[Attr, Attr], np.ndarray]) -> JoinQuery:
+    rels = [Relation.make(e, tables[e]) for e in edges]
+    return JoinQuery.make(rels)
+
+
+def pattern_edges(kind: str, n: int) -> List[Tuple[Attr, Attr]]:
+    """Named query families from the paper: cycles, cliques, lines (paths), stars."""
+    attrs = [f"X{i}" for i in range(n)]
+    if kind == "cycle":
+        return [(attrs[i], attrs[(i + 1) % n]) for i in range(n)]
+    if kind == "clique":
+        return [(attrs[i], attrs[j]) for i in range(n) for j in range(i + 1, n)]
+    if kind == "line":
+        return [(attrs[i], attrs[i + 1]) for i in range(n - 1)]
+    if kind == "star":
+        return [(attrs[0], attrs[i]) for i in range(1, n)]
+    raise ValueError(kind)
+
+
+def zipf_relation(
+    rng: np.random.Generator,
+    scheme: Tuple[Attr, Attr],
+    n: int,
+    dom_size: int,
+    skew: float = 0.0,
+) -> Relation:
+    """n tuples; each column drawn Zipf(skew) over [0, dom_size) (skew=0 → uniform)."""
+    cols = []
+    for _ in range(2):
+        if skew <= 0.0:
+            cols.append(rng.integers(0, dom_size, size=n))
+        else:
+            ranks = np.arange(1, dom_size + 1, dtype=np.float64)
+            probs = ranks ** (-skew)
+            probs /= probs.sum()
+            cols.append(rng.choice(dom_size, size=n, p=probs))
+    return Relation.make(scheme, np.stack(cols, axis=1))
+
+
+def random_query(
+    rng: np.random.Generator,
+    kind: str,
+    n_attrs: int,
+    tuples_per_rel: int,
+    dom_size: int,
+    skew: float = 0.0,
+) -> JoinQuery:
+    edges = pattern_edges(kind, n_attrs)
+    rels = [zipf_relation(rng, e, tuples_per_rel, dom_size, skew) for e in edges]
+    return JoinQuery.make(rels)

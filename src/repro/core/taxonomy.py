@@ -1,0 +1,239 @@
+"""Heavy/light taxonomy of the join result (paper Sec. 4).
+
+Given heavy parameter λ: a value x is *heavy* iff some relation R and attribute
+X ∈ scheme(R) have ≥ m/λ tuples with u(X) = x; *light* iff it appears but is not heavy.
+
+A configuration η of H ⊆ attset(Q) assigns a heavy value to every attribute in H.
+The residual relation R'_e(η) (for e active on H) keeps tuples of R_e that agree with η
+on e∩H and are light on e\\H, projected to e\\H.
+
+Everything here is *planner-side* metadata (heavy value sets, configuration enumeration,
+statistics); the data movement happens in repro.mpc / repro.dataplane.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterator, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .hypergraph import Edge, Hypergraph
+from .query import Attr, JoinQuery, Relation
+
+
+@dataclass(frozen=True)
+class HeavyStats:
+    """Heavy-value statistics of a query for a fixed λ (the paper's 'histogram').
+
+    - heavy[X]: sorted array of heavy values on attribute X (across all relations).
+    - Extended records (see DESIGN.md §6) so m_η is exactly computable on every host:
+      * cond[(e, X, x)]  = #tuples in R_e with u(X) = x (heavy x) and u(other) light
+      * pair[(e, x, y)]  = #tuples in R_e equal to the heavy-heavy pair (x, y)
+                           (key ordered by the relation's scheme)
+      * light_cnt[e]     = #tuples in R_e that are light on both attributes
+    """
+
+    lam: int
+    m: int
+    heavy: Dict[Attr, np.ndarray]
+    cond: Dict[Tuple[Edge, Attr, int], int]
+    pair: Dict[Tuple[Edge, int, int], int]
+    light_cnt: Dict[Edge, int]
+
+    def is_heavy(self, attr: Attr, values: np.ndarray) -> np.ndarray:
+        hv = self.heavy.get(attr)
+        if hv is None or hv.size == 0:
+            return np.zeros(values.shape, dtype=bool)
+        idx = np.searchsorted(hv, values)
+        idx = np.clip(idx, 0, hv.size - 1)
+        return hv[idx] == values
+
+    def n_heavy(self) -> int:
+        return sum(int(v.size) for v in self.heavy.values())
+
+
+def compute_stats(query: JoinQuery, lam: int) -> HeavyStats:
+    """Exact heavy statistics (the MPC protocol that distributes these is in
+    repro.mpc.statistics; this is the ground-truth computation used by the planner
+    and by tests)."""
+    m = query.m
+    threshold = max(1, -(-m // lam))  # ceil(m / lam)
+    heavy_sets: Dict[Attr, Set[int]] = {}
+    for rel in query.relations:
+        for attr in rel.scheme:
+            vals, cnts = np.unique(rel.column(attr), return_counts=True)
+            hv = vals[cnts >= threshold]
+            if hv.size:
+                heavy_sets.setdefault(attr, set()).update(hv.tolist())
+    heavy = {a: np.array(sorted(s), dtype=np.int64) for a, s in heavy_sets.items()}
+
+    stats = HeavyStats(lam=lam, m=m, heavy=heavy, cond={}, pair={}, light_cnt={})
+    for rel in query.relations:
+        e = rel.edge
+        x_attr, y_attr = rel.scheme
+        hx = stats.is_heavy(x_attr, rel.column(x_attr))
+        hy = stats.is_heavy(y_attr, rel.column(y_attr))
+        stats.light_cnt[e] = int((~hx & ~hy).sum())
+        # heavy on X, light on Y
+        sel = hx & ~hy
+        vals, cnts = np.unique(rel.column(x_attr)[sel], return_counts=True)
+        for v, c in zip(vals.tolist(), cnts.tolist()):
+            stats.cond[(e, x_attr, v)] = c
+        sel = hy & ~hx
+        vals, cnts = np.unique(rel.column(y_attr)[sel], return_counts=True)
+        for v, c in zip(vals.tolist(), cnts.tolist()):
+            stats.cond[(e, y_attr, v)] = c
+        sel = hx & hy
+        if sel.any():
+            pairs = rel.data[sel]
+            uniq, cnts = np.unique(pairs, axis=0, return_counts=True)
+            for (vx, vy), c in zip(uniq.tolist(), cnts.tolist()):
+                stats.pair[(e, vx, vy)] = int(c)
+    return stats
+
+
+@dataclass(frozen=True)
+class Configuration:
+    """A configuration η of H: heavy value per attribute of H (paper Sec. 4)."""
+
+    attrs: Tuple[Attr, ...]           # sorted H
+    values: Tuple[int, ...]
+
+    def value(self, attr: Attr) -> int:
+        return self.values[self.attrs.index(attr)]
+
+    def as_dict(self) -> Dict[Attr, int]:
+        return dict(zip(self.attrs, self.values))
+
+
+def configurations(stats: HeavyStats, h_set: Sequence[Attr]) -> Iterator[Configuration]:
+    """Enumerate config(Q, H): all heavy-value combinations over H. O(λ^{|H|})."""
+    attrs = tuple(sorted(h_set))
+    if not attrs:
+        yield Configuration(attrs=(), values=())
+        return
+    pools = []
+    for a in attrs:
+        hv = stats.heavy.get(a)
+        if hv is None or hv.size == 0:
+            return  # no configuration exists
+        pools.append(hv.tolist())
+    for combo in itertools.product(*pools):
+        yield Configuration(attrs=attrs, values=tuple(combo))
+
+
+# ---------------------------------------------------------------------------
+# Structure of the residual query under H (paper Sec. 5.1) — depends on H only.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HPlan:
+    """Combinatorial structure shared by all configurations of a fixed H."""
+
+    h_set: Tuple[Attr, ...]           # heavy attributes (sorted)
+    light: Tuple[Attr, ...]           # L = attset \ H (sorted)
+    isolated: Tuple[Attr, ...]        # I ⊆ L (paper (5.3))
+    border: Tuple[Attr, ...]          # light attrs on ≥1 cross edge
+    light_edges: Tuple[Edge, ...]     # both endpoints light
+    cross_edges: Tuple[Edge, ...]     # one endpoint heavy, one light
+    heavy_edges: Tuple[Edge, ...]     # both endpoints heavy
+
+
+def plan_for_h(query: JoinQuery, h_set: Sequence[Attr]) -> HPlan:
+    h = set(h_set)
+    attset = set(query.attset)
+    if not h <= attset:
+        raise ValueError("H must be a subset of attset(Q)")
+    light = attset - h
+    light_edges, cross_edges, heavy_edges = [], [], []
+    for rel in query.relations:
+        e = rel.edge
+        n_heavy = len(e & h)
+        if n_heavy == 0:
+            light_edges.append(e)
+        elif n_heavy == 1:
+            cross_edges.append(e)
+        else:
+            heavy_edges.append(e)
+    border = {next(iter(e - h)) for e in cross_edges}
+    # isolated: light attrs not incident to any light edge
+    non_isolated = {v for e in light_edges for v in e}
+    isolated = light - non_isolated
+    return HPlan(
+        h_set=tuple(sorted(h)),
+        light=tuple(sorted(light)),
+        isolated=tuple(sorted(isolated)),
+        border=tuple(sorted(border)),
+        light_edges=tuple(sorted(light_edges, key=lambda e: sorted(e))),
+        cross_edges=tuple(sorted(cross_edges, key=lambda e: sorted(e))),
+        heavy_edges=tuple(sorted(heavy_edges, key=lambda e: sorted(e))),
+    )
+
+
+def residual_size(
+    query: JoinQuery, stats: HeavyStats, plan: HPlan, eta: Configuration
+) -> int:
+    """m_η: total input size of Q'(η), computed exactly from the extended histogram
+    (paper Step 1 requires every machine to know m_η; see DESIGN.md §6)."""
+    h = set(plan.h_set)
+    total = 0
+    for rel in query.relations:
+        e = rel.edge
+        x_attr, y_attr = rel.scheme
+        inter = e & h
+        if len(inter) == 0:
+            total += stats.light_cnt[e]
+        elif len(inter) == 1:
+            (hx,) = inter
+            total += stats.cond.get((e, hx, eta.value(hx)), 0)
+        # |e∩H| == 2 → inactive edge: contributes no residual relation
+    return total
+
+
+def heavy_pair_present(
+    stats: HeavyStats, rel: Relation, eta: Configuration
+) -> bool:
+    """For an inactive edge (both attrs heavy): does R_e contain the η-pair? If not,
+    Q'(η) is empty (paper Sec. 1.3 example, R'_{D,K})."""
+    x_attr, y_attr = rel.scheme
+    key = (rel.edge, eta.value(x_attr), eta.value(y_attr))
+    return stats.pair.get(key, 0) > 0
+
+
+def residual_relations(
+    query: JoinQuery, stats: HeavyStats, plan: HPlan, eta: Configuration
+) -> Optional[Dict[Tuple[Edge, Tuple[Attr, ...]], Relation]]:
+    """Materialize Q'(η) in one process (oracle path for tests; the distributed path
+    lives in repro.mpc.engine). Returns None if some inactive edge rules η out.
+
+    Key: (original edge e, residual scheme e') — distinct cross edges can produce
+    distinct unary relations over the same attribute, so e is part of the key.
+    """
+    h = set(plan.h_set)
+    out: Dict[Tuple[Edge, Tuple[Attr, ...]], Relation] = {}
+    for rel in query.relations:
+        e = rel.edge
+        inter = e & h
+        if len(inter) == 2:
+            if not heavy_pair_present(stats, rel, eta):
+                return None
+            continue
+        x_attr, y_attr = rel.scheme
+        hx = stats.is_heavy(x_attr, rel.column(x_attr))
+        hy = stats.is_heavy(y_attr, rel.column(y_attr))
+        if len(inter) == 0:
+            sel = ~hx & ~hy
+            out[(e, rel.scheme)] = Relation.make(rel.scheme, rel.data[sel])
+        else:
+            (heavy_attr,) = inter
+            light_attr = y_attr if heavy_attr == x_attr else x_attr
+            heavy_col = rel.column(heavy_attr)
+            light_is = ~(hy if light_attr == y_attr else hx)
+            sel = (heavy_col == eta.value(heavy_attr)) & light_is
+            out[(e, (light_attr,))] = Relation.make(
+                (light_attr,), rel.column(light_attr)[sel].reshape(-1, 1)
+            )
+    return out

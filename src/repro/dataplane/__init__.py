@@ -1,0 +1,10 @@
+"""JAX data plane: the engine's communication phases on a real device mesh.
+
+Static-shape MPC (DESIGN.md §2.3): relations are capacity-padded per-device buffers
+(rows + validity count); exchanges are single all_to_all collectives sized by the
+paper's own w.h.p. load bounds, with overflow surfaced as a counter. Validated
+bit-for-bit against the exact-cost simulator in tests/test_dataplane_subprocess.py.
+"""
+
+from .exchange import PaddedShard, hash_exchange
+from .join import local_sorted_join, hypercube_binary_join

@@ -1,0 +1,100 @@
+"""Capacity-padded hash exchange over a mesh axis (the MPC routing round on TPU).
+
+Each device holds `rows (cap_in, w)` with the first `count` rows valid. The exchange:
+  1. partition ids via the hash_partition Pallas kernel (shared-seed hashing ⇒ every
+     device agrees, the paper's footnote-2 common randomness);
+  2. sort rows by destination, place into a (P, cap_slot, w) send buffer;
+  3. one `all_to_all` over the axis;
+  4. receive (P, cap_slot, w) + per-source counts; compact back to (cap_out, w).
+
+Capacity: the paper guarantees Õ(m/p) received rows w.h.p. for its routing steps, so
+cap_slot = c·ceil(cap_in/P) with slack c. Overflow (a destination slot exceeding
+capacity) is *detected and returned*, never silently dropped — the engine's retry
+doubles capacity, replacing the paper's 1/p^c failure probability."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ops import hash_partition
+
+
+@dataclass
+class PaddedShard:
+    """Device-local padded relation block (used inside shard_map bodies)."""
+
+    rows: jax.Array    # (cap, w) int32
+    count: jax.Array   # scalar int32 — valid prefix length
+
+    @property
+    def cap(self) -> int:
+        return self.rows.shape[0]
+
+
+def _valid_mask(cap: int, count: jax.Array) -> jax.Array:
+    return jnp.arange(cap) < count
+
+
+def pack_by_partition(
+    rows: jax.Array, count: jax.Array, part: jax.Array, n_parts: int, cap_slot: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """→ (send (P, cap_slot, w), send_counts (P,), overflow scalar).
+    Rows beyond a destination's cap_slot overflow (counted, not sent)."""
+    cap, w = rows.shape
+    valid = _valid_mask(cap, count)
+    part = jnp.where(valid, part, n_parts)              # invalid → ghost partition
+    order = jnp.argsort(part, stable=True)
+    rows_s = rows[order]
+    part_s = part[order]
+    # slot within destination
+    onehot = jax.nn.one_hot(part_s, n_parts + 1, dtype=jnp.int32)
+    slot = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+    send_counts = onehot.sum(0)[:n_parts]
+    overflow = jnp.maximum(send_counts - cap_slot, 0).sum()
+    keep = (part_s < n_parts) & (slot < cap_slot)
+    send = jnp.zeros((n_parts, cap_slot, w), rows.dtype)
+    send = send.at[part_s, jnp.clip(slot, 0, cap_slot - 1)].set(
+        jnp.where(keep[:, None], rows_s, 0), mode="drop"
+    )
+    return send, jnp.minimum(send_counts, cap_slot), overflow
+
+
+def compact(recv: jax.Array, recv_counts: jax.Array, cap_out: int):
+    """(P, cap_slot, w) + (P,) → (cap_out, w), total, overflow."""
+    p, cap_slot, w = recv.shape
+    valid = jnp.arange(cap_slot)[None, :] < recv_counts[:, None]
+    flat = recv.reshape(p * cap_slot, w)
+    vflat = valid.reshape(-1)
+    order = jnp.argsort(~vflat, stable=True)           # valid rows first
+    flat = flat[order]
+    total = vflat.sum()
+    overflow = jnp.maximum(total - cap_out, 0)
+    return flat[:cap_out], jnp.minimum(total, cap_out), overflow
+
+
+def hash_exchange(
+    rows: jax.Array,
+    count: jax.Array,
+    key_col: int,
+    axis_name: str,
+    n_parts: int,
+    cap_slot: int,
+    cap_out: int,
+    salt: int = 0,
+):
+    """Inside shard_map: route rows by hash(key) over `axis_name`.
+    Returns (rows_out (cap_out, w), count_out, overflow)."""
+    keys = rows[:, key_col].astype(jnp.int32) + jnp.int32(salt * 2654435761 % (2**31))
+    part, _ = hash_partition(keys, n_parts)
+    send, send_counts, ovf1 = pack_by_partition(rows, count, part, n_parts, cap_slot)
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=False)
+    recv_counts = jax.lax.all_to_all(
+        send_counts.reshape(n_parts, 1), axis_name, split_axis=0, concat_axis=0, tiled=False
+    ).reshape(n_parts)
+    out, count_out, ovf2 = compact(recv, recv_counts, cap_out)
+    return out, count_out, ovf1 + ovf2

@@ -1,0 +1,100 @@
+"""Distributed equi-join on a device mesh: exchange + local sorted join.
+
+`hypercube_binary_join` is the one-round routed join R(A,B) ⋈ S(B,C) → (A,B,C):
+both relations are hash-exchanged on B over the machines axis, then each device runs
+the local sorted join (sort by key + merge_join_counts Pallas probe + static-size
+expansion). Output stays device-local (the MPC model's contract: every result tuple
+materializes on some machine).
+
+This is the engine's Lemma 3.3 data path on real devices; the simulator remains the
+load oracle, and tests/test_dataplane_subprocess.py checks both produce identical
+result sets on 8 fake host devices."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..kernels.ops import merge_join_counts
+from .exchange import hash_exchange
+
+
+def local_sorted_join(
+    a_rows: jax.Array, a_count: jax.Array,      # (capA, wa): join key in col ka
+    b_rows: jax.Array, b_count: jax.Array,      # (capB, wb): join key in col kb
+    ka: int, kb: int, cap_out: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """→ (out (cap_out, wa+wb-1), count, overflow). Key written once (A's columns,
+    then B's non-key columns)."""
+    capa, wa = a_rows.shape
+    capb, wb = b_rows.shape
+    big = jnp.iinfo(jnp.int32).max
+
+    a_keys = jnp.where(jnp.arange(capa) < a_count, a_rows[:, ka], big)
+    b_keys = jnp.where(jnp.arange(capb) < b_count, b_rows[:, kb], big)
+    a_ord = jnp.argsort(a_keys)
+    b_ord = jnp.argsort(b_keys)
+    a_sorted = a_rows[a_ord]
+    b_sorted = b_rows[b_ord]
+    a_k = a_keys[a_ord]
+    b_k = b_keys[b_ord]
+
+    lower, upper = merge_join_counts(a_k, b_k)
+    # sentinel keys must not match each other
+    real_a = a_k < big
+    counts = jnp.where(real_a, upper - lower, 0)
+    starts = jnp.cumsum(counts) - counts           # output offset per a-row
+    total = counts.sum()
+    overflow = jnp.maximum(total - cap_out, 0)
+
+    # expansion: out row t ← (a_idx(t) = searchsorted(starts, t, 'right')-1,
+    #                         b_idx(t) = lower[a_idx] + (t - starts[a_idx]))
+    t = jnp.arange(cap_out)
+    a_idx = jnp.clip(jnp.searchsorted(starts, t, side="right") - 1, 0, capa - 1)
+    within = t - starts[a_idx]
+    b_idx = jnp.clip(lower[a_idx] + within, 0, capb - 1)
+    valid = t < jnp.minimum(total, cap_out)
+
+    a_part = a_sorted[a_idx]                                        # (cap_out, wa)
+    b_cols = [c for c in range(wb) if c != kb]
+    b_part = b_sorted[b_idx][:, jnp.array(b_cols, jnp.int32)] if b_cols else jnp.zeros(
+        (cap_out, 0), b_rows.dtype
+    )
+    out = jnp.concatenate([a_part, b_part], axis=1)
+    out = jnp.where(valid[:, None], out, 0)
+    return out, jnp.minimum(total, cap_out), overflow
+
+
+def hypercube_binary_join(
+    mesh,
+    axis_name: str,
+    a_global: jax.Array, a_counts: jax.Array,   # (p, capA, wa), (p,) device-sharded
+    b_global: jax.Array, b_counts: jax.Array,
+    ka: int, kb: int,
+    cap_slot: int, cap_mid: int, cap_out: int,
+):
+    """Full distributed join under shard_map. Inputs/outputs sharded over axis 0.
+    Returns (out (p, cap_out, w), counts (p,), overflow (p,))."""
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(a_rows, a_cnt, b_rows, b_cnt):
+        a_rows, a_cnt, b_rows, b_cnt = a_rows[0], a_cnt[0], b_rows[0], b_cnt[0]
+        a2, ca, o1 = hash_exchange(a_rows, a_cnt, ka, axis_name, p, cap_slot, cap_mid)
+        b2, cb, o2 = hash_exchange(b_rows, b_cnt, kb, axis_name, p, cap_slot, cap_mid)
+        out, cnt, o3 = local_sorted_join(a2, ca, b2, cb, ka, kb, cap_out)
+        return out[None], cnt[None], (o1 + o2 + o3)[None]
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None, None), P(axis_name)),
+        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name)),
+        check_rep=False,
+    )
+    return fn(a_global, a_counts, b_global, b_counts)

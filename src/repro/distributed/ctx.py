@@ -1,0 +1,68 @@
+"""Sharding context: model code annotates activations with logical axes ("dp", "tp",
+"sp", None); the context resolves them to mesh axis names — or no-ops when no mesh is
+active (single-device smoke tests).
+
+Logical axes:
+  dp — data-parallel: ("pod", "data") on the multi-pod mesh, ("data",) on one pod
+  tp — tensor-parallel: "model"
+  sp — sequence-parallel: "model" when cfg.sequence_parallel else None
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    data: Tuple[str, ...] = ("data",)     # dp axes (includes "pod" when multi-pod)
+    model: str = "model"
+    sequence_parallel: bool = False
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        if logical == "dp":
+            return self.data if len(self.data) > 1 else self.data[0]
+        if logical == "tp":
+            return self.model
+        if logical == "sp":
+            return self.model if self.sequence_parallel else None
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+
+_AXES: Optional[MeshAxes] = None
+
+
+def set_axes(axes: Optional[MeshAxes]) -> None:
+    global _AXES
+    _AXES = axes
+
+
+def current_axes() -> Optional[MeshAxes]:
+    return _AXES
+
+
+@contextlib.contextmanager
+def axes_context(axes: Optional[MeshAxes]):
+    global _AXES
+    prev = _AXES
+    _AXES = axes
+    try:
+        yield
+    finally:
+        _AXES = prev
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active MeshAxes; identity when none."""
+    axes = _AXES
+    if axes is None:
+        return x
+    spec = P(*(axes.resolve(a) for a in logical))
+    return jax.lax.with_sharding_constraint(x, spec)

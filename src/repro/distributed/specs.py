@@ -1,0 +1,218 @@
+"""PartitionSpec rules for parameters, optimizer state, batches, and caches.
+
+Rules are keyed on the leaf name (the last path segment), applied to the *trailing*
+dims — scanned stacks have a leading repeats dim that is never sharded.
+
+  "tp"   → the model axis        (Megatron column/row sharding, EP on expert dim)
+  "fsdp" → the DP axes           (parameter + optimizer-state sharding; ZeRO)
+  None   → replicated
+
+FSDP notes: big archs cannot hold bf16 params replicated over DP (mistral-large:
+123B × 2B / 16 TP-shards ≈ 15.4 GB/device), so weight matrices are 2-D sharded
+(fsdp × tp). The fp32 master/m/v in the optimizer state inherit the same specs,
+giving ZeRO semantics for free. Divisibility is checked per-leaf: a rule falls back
+to None on any non-divisible dim (e.g. whisper's 12 heads vs 16-way model axis —
+its attention weights stay tp-shardable on flat dims, activations replicate)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .ctx import MeshAxes
+
+# leaf name → logical spec for the trailing dims
+_PARAM_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embedding: vocab over tp (vocab-parallel logits/CE)
+    "embedding": ("tp", None),
+    # attention
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    # MLA
+    "w_dkv": ("fsdp", None),
+    "w_uk": (None, "tp"),
+    "w_uv": (None, "tp"),
+    # dense MLP
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_out": ("tp", "fsdp"),
+    # MoE (3-D expert stacks: E over tp = expert parallelism)
+    "router": (None, None),
+    # mamba
+    "w_z": ("fsdp", "tp"),
+    "w_x": ("fsdp", "tp"),
+    "w_B": ("fsdp", None),
+    "w_C": ("fsdp", None),
+    "w_dt": ("fsdp", None),
+    "conv_x": (None, "tp"),
+    "conv_B": (None, None),
+    "conv_C": (None, None),
+    "norm_scale": (None,),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    "scale": (None,),
+    "bias": (None,),
+}
+
+# MoE expert stacks are 3-D; keyed by (name, ndim-without-stack)
+_MOE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w_gate": ("tp", "fsdp", None),
+    "w_up": ("tp", "fsdp", None),
+    "w_out": ("tp", None, "fsdp"),
+}
+
+
+def _resolve(axes: MeshAxes, logical: Optional[str], fsdp: bool):
+    if logical == "tp":
+        return axes.model
+    if logical == "fsdp":
+        if not fsdp:
+            return None
+        return axes.data if len(axes.data) > 1 else axes.data[0]
+    return None
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return int(mesh.shape[entry])
+
+
+def _fit(mesh, shape: Tuple[int, ...], spec: Tuple, stack_dims: int) -> P:
+    """Prefix Nones for stacked dims; drop any axis that doesn't divide."""
+    full = (None,) * stack_dims + tuple(spec)
+    out = []
+    for dim, entry in zip(shape, full):
+        if entry is not None and dim % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_pspecs(params, mesh, axes: MeshAxes, fsdp: bool = True):
+    """Tree of PartitionSpec matching `params` (which may hold arrays or
+    ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        name = None
+        in_moe = False
+        for seg in path:
+            key = getattr(seg, "key", getattr(seg, "name", None))
+            if key == "moe":
+                in_moe = True
+            if key is not None:
+                name = key
+        shape = leaf.shape
+        rules = None
+        if in_moe and name in _MOE_RULES and len(shape) >= 3:
+            rules = _MOE_RULES[name]
+        elif name in _PARAM_RULES:
+            rules = _PARAM_RULES[name]
+        if rules is None:
+            return P(*([None] * len(shape)))
+        stack = len(shape) - len(rules)
+        assert stack >= 0, (path, shape, rules)
+        resolved = tuple(_resolve(axes, r, fsdp) for r in rules)
+        return _fit(mesh, shape, resolved, stack)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_pspecs(param_specs, opt_state, mesh, axes: MeshAxes):
+    """master/m/v inherit param specs (ZeRO via fsdp); step is replicated; the error-
+    feedback buffer (if present) also inherits."""
+    out: Dict[str, Any] = {}
+    if "adamw" in opt_state:
+        inner = {
+            "master": param_specs,
+            "m": param_specs,
+            "v": param_specs,
+            "step": P(),
+        }
+        out["adamw"] = inner
+        if "ef" in opt_state:
+            out["ef"] = param_specs
+        return out
+    raise ValueError("unexpected opt state layout")
+
+
+def batch_pspecs(batch, mesh, axes: MeshAxes):
+    """Shard the batch dim over DP when divisible (long_500k batch=1 stays
+    replicated — the DP axes idle, inherent to the shape)."""
+    dp = axes.data if len(axes.data) > 1 else axes.data[0]
+    dp_size = _axis_size(mesh, dp)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % dp_size == 0:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_pspecs(cache, mesh, axes: MeshAxes, cfg):
+    """Decode caches: batch over DP (when divisible), long sequence dims over the
+    model axis (split-KV flash decoding), SSM heads over the model axis.
+
+    Layout conventions (see models/model.py):
+      attn  k/v       (R?, B, S, KV, hd)   → S over tp
+      mla   c/kr      (R?, B, S, r)        → S over tp
+      mamba state     (R?, B, H, P, N)     → H over tp
+      mamba conv_*    (R?, B, k-1, CH)     → CH over tp (x stream only, via fit)
+      enc_out         (B, F, d)            → batch over dp
+    """
+    dp = axes.data if len(axes.data) > 1 else axes.data[0]
+    dp_size = _axis_size(mesh, dp)
+    tp = axes.model
+    tp_size = _axis_size(mesh, tp)
+
+    def one(path, leaf):
+        name = None
+        for seg in path:
+            key = getattr(seg, "key", getattr(seg, "name", None))
+            if key is not None and not str(key).isdigit():
+                name = key
+        shape = leaf.shape
+        if leaf.ndim == 0:
+            return P()
+        # identify stack prefix: blocks caches have leading R
+        stacked = any(getattr(s, "key", None) == "blocks" for s in path)
+        b_dim = 1 if stacked else 0
+        spec = [None] * leaf.ndim
+        if shape[b_dim] % dp_size == 0:
+            spec[b_dim] = dp
+        if name in ("k", "v", "c", "kr"):
+            s_dim = b_dim + 1
+            if shape[s_dim] % tp_size == 0 and shape[s_dim] >= tp_size * 128:
+                spec[s_dim] = tp
+        elif name == "state":
+            h_dim = b_dim + 1
+            if shape[h_dim] % tp_size == 0:
+                spec[h_dim] = tp
+        elif name in ("conv_x",):
+            if shape[-1] % tp_size == 0:
+                spec[-1] = tp
+        elif name in ("cross_k", "cross_v", "enc_out"):
+            pass
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

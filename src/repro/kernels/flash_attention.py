@@ -1,0 +1,111 @@
+"""Flash attention (online-softmax) as a Pallas TPU kernel.
+
+The §Roofline tables show attention-score materialization is the dominant memory term
+for every dense train/prefill cell — the jnp path writes (B,H,Cq,Sk) fp32 scores to
+HBM several times per softmax. This kernel keeps the (BQ, BK) score tile in VMEM and
+carries running (m, l, acc) statistics across the KV sweep, so HBM sees only Q/K/V/O.
+
+Grid (BH, Sq/BQ, Sk/BK) with the KV axis minor: the output block and the (m, l)
+statistic blocks are *revisited* across the KV sweep (the Pallas accumulator pattern,
+same as kernels/ssd.py). The final KV step normalizes acc by l.
+
+Causal masking is by absolute position (program ids × block shapes); fully-masked
+blocks are computed-and-masked (a production TPU kernel would use a triangular grid —
+noted as future work; interpret-mode correctness is what this container can validate).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale: float, causal: bool,
+            bq: int, bk: int, n_k: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...][0]            # (BQ, D)
+    k = k_ref[...][0]            # (BK, D)
+    v = v_ref[...][0]            # (BK, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+    if causal:
+        i = pl.program_id(1)
+        q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_ref[...][0]       # (BQ,)
+    l_prev = l_ref[...][0]
+    acc = o_ref[...][0].astype(jnp.float32)
+
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=1)
+    acc = acc * corr[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+
+    m_ref[...] = m_new[None]
+    l_ref[...] = l_new[None]
+
+    @pl.when(j == n_k - 1)
+    def _final():
+        o_ref[...] = (acc / jnp.maximum(l_new, 1e-30)[:, None])[None].astype(o_ref.dtype)
+
+    @pl.when(j < n_k - 1)
+    def _carry():
+        o_ref[...] = acc[None].astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,      # (BH, Sq, D)
+    k: jax.Array,      # (BH, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+):
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    n_q, n_k = sq // bq, sk // bk
+    scale = d ** -0.5
+    kern = lambda *refs: _kernel(
+        *refs, scale=scale, causal=causal, bq=bq, bk=bk, n_k=n_k
+    )
+    out, m, l = pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),   # revisited over j
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out.astype(q.dtype)

@@ -1,0 +1,54 @@
+"""Hash partitioning (the exchange's send side) as a Pallas TPU kernel.
+
+Computes, per input tile, (i) the partition id of every key under a multiplicative
+uint32 mix and (ii) the tile's partition histogram — the send-count matrix the padded
+all_to_all exchange is sized from (repro/dataplane). The histogram is a one-hot
+matmul: (BLOCK × P) one-hot against an all-ones vector — MXU-friendly, no scatter
+(TPU has no shared-memory atomics; this is the standard TPU radix-count shape).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MIX_A, MIX_B
+
+BLOCK = 1024
+
+
+def _kernel(keys_ref, part_ref, hist_ref, *, n_parts: int):
+    k = keys_ref[...].astype(jnp.uint32)
+    h = (k ^ (k >> 16)) * jnp.uint32(MIX_A)
+    h = (h ^ (h >> 13)) * jnp.uint32(MIX_B)
+    h = h ^ (h >> 16)
+    part = (h % jnp.uint32(n_parts)).astype(jnp.int32)
+    part_ref[...] = part
+    iota = jax.lax.broadcasted_iota(jnp.int32, (BLOCK, n_parts), 1)
+    onehot = (part[:, None] == iota).astype(jnp.int32)
+    hist_ref[...] = onehot.sum(axis=0)[None, :]
+
+
+def hash_partition_pallas(
+    keys: jax.Array, n_parts: int, interpret: bool = True
+):
+    """keys (N,) int32/uint32, N % BLOCK == 0 → (part (N,), hist (N/BLOCK, P))."""
+    n = keys.shape[0]
+    assert n % BLOCK == 0, n
+    n_tiles = n // BLOCK
+    kernel = lambda kr, pr, hr: _kernel(kr, pr, hr, n_parts=n_parts)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1, n_parts), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, n_parts), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys)

@@ -1,0 +1,107 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with interpret=True (the Pallas
+interpreter runs the kernel body faithfully, including the grid/BlockSpec schedule);
+on TPU backends `_INTERPRET` flips to False and the same code compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import hash_partition as _hp
+from . import merge_join as _mj
+from . import ssd as _ssd
+from . import ref as _ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "use_pallas"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128, bk: int = 128,
+                    use_pallas: bool = True):
+    """Online-softmax attention: q (BH,Sq,D), k/v (BH,Sk,D) → (BH,Sq,D)."""
+    if not use_pallas:
+        return _ref.flash_attention_ref(q, k, v, causal=causal)
+    bq = min(bq, q.shape[1])
+    bk = min(bk, k.shape[1])
+    return _fa.flash_attention_pallas(
+        q, k, v, causal=causal, bq=bq, bk=bk, interpret=_INTERPRET
+    )
+
+
+def fold64(keys: jax.Array) -> jax.Array:
+    """Fold int64 join keys to int32 lanes for the TPU kernels (xor-fold)."""
+    k = keys.astype(jnp.uint64)
+    return (jnp.uint32(0xFFFFFFFF) & (k ^ (k >> 32)).astype(jnp.uint32)).astype(jnp.int32)
+
+
+def _pad_to(x: jax.Array, mult: int, fill) -> jax.Array:
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+    return x
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def merge_join_counts(a_keys: jax.Array, b_keys: jax.Array, use_pallas: bool = True):
+    """Sorted int32 keys → (lower, upper) match ranges of each a in b.
+    Handles arbitrary lengths by sentinel padding (INT32_MAX sorts last)."""
+    n, m = a_keys.shape[0], b_keys.shape[0]
+    if not use_pallas:
+        return _ref.merge_join_counts_ref(a_keys, b_keys)
+    big = jnp.iinfo(jnp.int32).max
+    a_p = _pad_to(a_keys, _mj.BLOCK_A, big)
+    b_p = _pad_to(b_keys, _mj.BLOCK_B, big)
+    lower, upper = _mj.merge_join_counts_pallas(a_p, b_p, interpret=_INTERPRET)
+    # padded B sentinels never compare < or <= real keys except vs the padded A
+    # sentinels; trim A and clamp to the true M.
+    return jnp.minimum(lower[:n], m), jnp.minimum(upper[:n], m)
+
+
+@partial(jax.jit, static_argnames=("n_parts", "use_pallas"))
+def hash_partition(keys: jax.Array, n_parts: int, use_pallas: bool = True):
+    """→ (part (N,), hist (P,)) partition ids + global histogram."""
+    n = keys.shape[0]
+    if keys.dtype in (jnp.int64, jnp.uint64):
+        keys = fold64(keys)
+    if not use_pallas:
+        part, hist = _ref.hash_partition_ref(keys, n_parts, tile=min(n, _hp.BLOCK))
+        return part, hist.sum(axis=0)
+    keys_p = _pad_to(keys, _hp.BLOCK, 0)
+    part, hist = _hp.hash_partition_pallas(keys_p, n_parts, interpret=_INTERPRET)
+    part = part[:n]
+    hist = hist.sum(axis=0)
+    if keys_p.shape[0] != n:  # remove the padding keys' contribution (they hash as 0)
+        pad_part, _ = _ref.hash_partition_ref(
+            jnp.zeros((keys_p.shape[0] - n,), jnp.int32), n_parts, tile=1
+        )
+        hist = hist - jnp.bincount(pad_part, length=n_parts).astype(hist.dtype)
+    return part, hist
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd_chunk(x, dt, a, b_ssm, c_ssm, chunk: int = 64, use_pallas: bool = True):
+    """(BH,S,P) SSD over chunks → (y, final_state). fp32."""
+    if not use_pallas:
+        # jnp oracle: sequential over chunks via the per-chunk reference
+        bh, s, p = x.shape
+        n = b_ssm.shape[-1]
+        nc = s // chunk
+
+        def per_bh(xb, dtb, ab, bb, cb):
+            def step(state, idx):
+                sl = lambda arr: jax.lax.dynamic_slice_in_dim(arr, idx * chunk, chunk)
+                y, state = _ref.ssd_chunk_ref(sl(xb), sl(dtb), ab, sl(bb), sl(cb), state)
+                return state, y
+
+            state0 = jnp.zeros((p, n), jnp.float32)
+            state, ys = jax.lax.scan(step, state0, jnp.arange(nc))
+            return ys.reshape(s, p), state
+
+        return jax.vmap(per_bh)(x, dt, a, b_ssm, c_ssm)
+    return _ssd.ssd_chunk_pallas(x, dt, a, b_ssm, c_ssm, chunk, interpret=_INTERPRET)

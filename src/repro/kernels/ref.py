@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MIX_A = 2654435761  # Knuth multiplicative constant (plain int: kernels re-wrap it)
+MIX_B = 0x9E3779B9
+
+
+def merge_join_counts_ref(a_keys: jax.Array, b_keys: jax.Array):
+    """a_keys (N,), b_keys (M,) sorted ascending → (lower (N,), upper (N,)) int32:
+    matches of a_keys[i] in b_keys live at [lower[i], upper[i])."""
+    lower = jnp.searchsorted(b_keys, a_keys, side="left").astype(jnp.int32)
+    upper = jnp.searchsorted(b_keys, a_keys, side="right").astype(jnp.int32)
+    return lower, upper
+
+
+def hash_u32_ref(keys: jax.Array) -> jax.Array:
+    """Multiplicative mix on uint32 lanes (int64 keys are pre-folded in ops.py)."""
+    k = keys.astype(jnp.uint32)
+    h = (k ^ (k >> 16)) * jnp.uint32(MIX_A)
+    h = (h ^ (h >> 13)) * jnp.uint32(MIX_B)
+    return h ^ (h >> 16)
+
+
+def hash_partition_ref(keys: jax.Array, n_parts: int, tile: int):
+    """→ (part (N,) int32, hist (n_tiles, n_parts) int32): partition id per key and
+    the per-tile histogram (the exchange's send-count matrix)."""
+    part = (hash_u32_ref(keys) % jnp.uint32(n_parts)).astype(jnp.int32)
+    n = keys.shape[0]
+    n_tiles = n // tile
+    onehot = jax.nn.one_hot(part.reshape(n_tiles, tile), n_parts, dtype=jnp.int32)
+    hist = onehot.sum(axis=1)
+    return part, hist
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Plain softmax attention oracle: q (BH,Sq,D), k/v (BH,Sk,D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k, preferred_element_type=jnp.float32)
+    s = s * (d ** -0.5)
+    if causal:
+        sq, sk = s.shape[1], s.shape[2]
+        iq = jnp.arange(sq)[:, None]
+        ik = jnp.arange(sk)[None, :]
+        s = jnp.where(ik <= iq, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)
+
+
+def ssd_chunk_ref(x, dt, a, b_ssm, c_ssm, prev_state):
+    """One SSD chunk for one (batch, head): x (Q,P), dt (Q,), a scalar, b/c (Q,N),
+    prev_state (P,N) → (y (Q,P), new_state (P,N)). fp32 math."""
+    q = x.shape[0]
+    da = dt * a                                       # (Q,)
+    cum = jnp.cumsum(da)
+    li = cum[:, None] - cum[None, :]
+    iot = jnp.arange(q)
+    mask = iot[:, None] >= iot[None, :]
+    decay = jnp.exp(jnp.where(mask, li, -jnp.inf))    # (Q,Q), mask pre-exp
+    cb = c_ssm @ b_ssm.T                              # (Q,Q)
+    w = cb * decay * dt[None, :]
+    y_diag = w @ x                                    # (Q,P)
+    y_off = (jnp.exp(cum)[:, None] * c_ssm) @ prev_state.T   # (Q,N)@(N,P)
+    decay_tail = jnp.exp(cum[-1] - cum)               # (Q,)
+    s_new = x.T @ (b_ssm * (decay_tail * dt)[:, None])       # (P,N)
+    new_state = jnp.exp(cum[-1]) * prev_state + s_new
+    return y_diag + y_off, new_state

@@ -1,0 +1,98 @@
+"""Mamba-2 / SSD intra-chunk kernel (pl.pallas_call + BlockSpec VMEM tiling).
+
+One grid step processes one (batch·head, chunk) cell entirely in VMEM:
+  x (Q,P), dt (Q,), B̃/C (Q,N), prev_state (P,N)  — Q=chunk, P=headdim, N=d_state
+  y    = ((C B̃ᵀ) ⊙ L ⊙ dtᵀ) x  +  exp(cum) C prev_stateᵀ       (two MXU matmuls)
+  newS = exp(seg) prev_state + xᵀ (B̃ ⊙ (exp(seg-cum)·dt))       (one MXU matmul)
+
+This is the paper-published SSD chunk decomposition with the CUDA selective-scan
+replaced by MXU-shaped matmuls (DESIGN.md §2.4). The inter-chunk recurrence stays in
+XLA (associative_scan over ~16 chunk states — negligible). Chunk states are carried
+*sequentially inside the kernel grid*: the chunk axis is the minor grid dimension and
+the state block is revisited, so prev_state for chunk c is the block left by c-1 —
+the classic Pallas accumulator pattern.
+
+VMEM budget per cell at (Q,P,N)=(256,64,128): QN+QP+QQ+PN ≈ 0.6 MB fp32 — fits easily.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[...][0]          # (Q,P)
+    dt = dt_ref[...][0]        # (Q,)
+    a = a_ref[...][0]          # scalar (per head)
+    b = b_ref[...][0]          # (Q,N)
+    c = c_ref[...][0]          # (Q,N)
+    prev = state_ref[...][0]   # (P,N)
+
+    q = x.shape[0]
+    da = dt * a
+    cum = jnp.cumsum(da)
+    li = cum[:, None] - cum[None, :]
+    iot_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iot_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.exp(jnp.where(iot_i >= iot_j, li, -jnp.inf))  # mask pre-exp (no inf)
+
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)       # (Q,Q) MXU
+    w = cb * decay * dt[None, :]
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)          # (Q,P) MXU
+    y += jnp.dot(
+        jnp.exp(cum)[:, None] * c, prev.T, preferred_element_type=jnp.float32
+    )                                                              # (Q,P) MXU
+
+    decay_tail = jnp.exp(cum[-1] - cum)
+    s_new = jnp.dot(
+        x.T, b * (decay_tail * dt)[:, None], preferred_element_type=jnp.float32
+    )                                                              # (P,N) MXU
+    y_ref[...] = y[None]
+    state_ref[...] = (jnp.exp(cum[-1]) * prev + s_new)[None]
+
+
+def ssd_chunk_pallas(
+    x: jax.Array,      # (BH, S, P) fp32
+    dt: jax.Array,     # (BH, S)
+    a: jax.Array,      # (BH,)
+    b_ssm: jax.Array,  # (BH, S, N)
+    c_ssm: jax.Array,  # (BH, S, N)
+    chunk: int,
+    interpret: bool = True,
+):
+    """→ (y (BH,S,P), final_state (BH,P,N)). Grid (BH, S/chunk); the state output
+    block is revisited across the chunk axis (sequential recurrence in-kernel)."""
+    bh, s, p = x.shape
+    n = b_ssm.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (bh, nc)
+    y, state = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, p, n), lambda i, j: (i, 0, 0)),   # revisited: carries state
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, b_ssm, c_ssm)
+    return y, state

@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (architecture × input shape) on the
+single-pod (16, 16) mesh and the 2-pod (2, 16, 16) mesh, print memory/cost analysis,
+and write per-cell JSON artifacts for the roofline table.
+
+MUST be the process entry point (the XLA flag above is read at first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun                      # everything
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod --arch mamba2-780m ...
+
+Idempotent/fault-tolerant: each cell's artifact is written atomically to
+artifacts/dryrun/; existing artifacts are skipped unless --force. A crashed run (OOM,
+timeout) resumes where it left off — the same discipline a 1000-node launcher needs.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+
+from ..analysis.roofline import collective_bytes, model_flops, roofline_terms
+from ..configs import ARCHS, SHAPES, shape_applicable
+from ..distributed.ctx import axes_context
+from ..distributed.specs import (
+    batch_pspecs,
+    cache_pspecs,
+    opt_state_pspecs,
+    param_pspecs,
+    to_shardings,
+)
+from ..train.step import TrainConfig, make_prefill_step, make_serve_step, make_train_step
+from .inputs import input_specs
+from .mesh import axes_for, make_production_mesh
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# §Perf hillclimb variants: comma-separated config transforms, e.g.
+#   --variant ssd64,spon   → artifacts tagged "ssd64,spon"
+from dataclasses import replace as _replace
+
+VARIANTS = {
+    "ssd64": lambda c: _replace(c, ssd_chunk=64),
+    "ssd128": lambda c: _replace(c, ssd_chunk=128),
+    "spon": lambda c: _replace(c, sequence_parallel=True),
+    "spoff": lambda c: _replace(c, sequence_parallel=False),
+    "cap100": lambda c: _replace(c, capacity_factor=1.0),
+    "densemoe": lambda c: _replace(c, moe_dispatch="dense"),
+    "rematdots": lambda c: _replace(c, remat="dots"),
+    "rematnone": lambda c: _replace(c, remat="none"),
+    "splayer": lambda c: _replace(c, sp_boundary="layer"),
+    # pure-code variants (the transform is the current source tree): identity
+    "code": lambda c: c,
+    # per-arch best (§Perf): layer-boundary SP resharding where SP is on (hurts
+    # non-SP archs by removing anchor constraints), capacity 1.0 for MoE dispatch.
+    "opt": lambda c: _replace(
+        c,
+        sp_boundary="layer" if c.sequence_parallel else c.sp_boundary,
+        capacity_factor=1.0 if c.n_experts else c.capacity_factor,
+    ),
+}
+
+
+def apply_variant(cfg, variant: str):
+    if variant == "baseline":
+        return cfg
+    for name in variant.split(","):
+        cfg = VARIANTS[name](cfg)
+    return cfg
+
+
+def _cost_get(cost, key, default=0.0):
+    try:
+        v = cost.get(key, default) if hasattr(cost, "get") else default
+        return float(v)
+    except Exception:
+        return default
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, tcfg: TrainConfig | None = None,
+             variant: str = "baseline", cfg_override=None) -> dict:
+    cfg = cfg_override if cfg_override is not None else apply_variant(ARCHS[arch], variant)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "variant": variant, "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = axes_for(mesh, sequence_parallel=cfg.sequence_parallel)
+    tcfg = tcfg or TrainConfig()
+    specs = input_specs(cfg, shape, tcfg)
+
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh), axes_context(axes):
+        p_specs = param_pspecs(specs["params"], mesh, axes)
+        p_sh = to_shardings(p_specs, mesh)
+
+        if shape.kind == "train":
+            o_specs = opt_state_pspecs(p_specs, specs["opt_state"], mesh, axes)
+            o_sh = to_shardings(o_specs, mesh)
+            b_sh = to_shardings(batch_pspecs(specs["batch"], mesh, axes), mesh)
+            step = make_train_step(cfg, tcfg)
+            jitted = jax.jit(
+                step, in_shardings=(p_sh, o_sh, b_sh), donate_argnums=(0, 1)
+            )
+            lowered = jitted.lower(specs["params"], specs["opt_state"], specs["batch"])
+        elif shape.kind == "prefill":
+            b_sh = to_shardings(batch_pspecs(specs["batch"], mesh, axes), mesh)
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(specs["params"], specs["batch"])
+        else:
+            c_sh = to_shardings(cache_pspecs(specs["cache"], mesh, axes, cfg), mesh)
+            t_sh = to_shardings(batch_pspecs(specs["tokens"], mesh, axes), mesh)
+            step = make_serve_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh), donate_argnums=(1,))
+            lowered = jitted.lower(specs["params"], specs["cache"], specs["tokens"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+
+        # scan-body trip-count correction (see analysis/probes.py):
+        # XLA cost analysis counts while bodies once; add (R-1)×body per probe.
+        from ..analysis.probes import probe_costs
+
+        probes = probe_costs(
+            cfg, shape, shape.kind, mesh, axes,
+            specs["params"], p_specs,
+            cache_sds=specs.get("cache"),
+            cache_specs=(
+                cache_pspecs(specs["cache"], mesh, axes, cfg)
+                if shape.kind == "decode" else None
+            ),
+        )
+
+    n_chips = mesh.devices.size
+    flops_raw = _cost_get(cost, "flops")
+    bytes_raw = _cost_get(cost, "bytes accessed")
+    coll_raw = float(coll["total_bytes"])
+    flops_dev, bytes_dev, coll_dev = flops_raw, bytes_raw, coll_raw
+    probe_list = []
+    for extra, c in probes:
+        flops_dev += extra * c["flops"]
+        bytes_dev += extra * c["bytes"]
+        coll_dev += extra * c["coll_bytes"]
+        probe_list.append({"extra_repeats": extra, **c})
+
+    terms = roofline_terms(flops_dev, bytes_dev, coll_dev)
+    mflops = model_flops(cfg, shape, shape.kind)
+    useful = mflops / max(1.0, flops_dev * n_chips)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "multi_pod": multi_pod,
+        "variant": variant,
+        "status": "ok",
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "coll_bytes_per_device": coll_dev,
+        "raw_module": {"flops": flops_raw, "bytes": bytes_raw, "coll_bytes": coll_raw},
+        "probes": probe_list,
+        "collectives": coll,
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": terms,
+        "model_flops_global": mflops,
+        "useful_flops_fraction": useful,
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape cell (default: all)")
+    ap.add_argument("--multi-pod", action="store_true", help="2-pod 512-chip mesh")
+    ap.add_argument("--both-meshes", action="store_true", help="run single- AND multi-pod")
+    ap.add_argument("--force", action="store_true", help="recompute existing artifacts")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}__{args.variant}"
+                path = ART_DIR / f"{tag}.json"
+                if path.exists() and not args.force:
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") != "error":  # errors always retried
+                        print(f"[skip-cached] {tag}")
+                        continue
+                print(f"[cell] {tag} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mp, variant=args.variant)
+                except Exception as e:  # record the failure; keep going
+                    res = {
+                        "arch": arch, "shape": shape, "multi_pod": mp,
+                        "variant": args.variant, "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    failures.append(tag)
+                tmp = path.with_suffix(".tmp")
+                tmp.write_text(json.dumps(res, indent=2, default=str))
+                tmp.rename(path)
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    r = res["roofline"]
+                    extra = (
+                        f" bottleneck={r['bottleneck']}"
+                        f" t_c={r['t_compute_s']:.4f}s t_m={r['t_memory_s']:.4f}s"
+                        f" t_x={r['t_collective_s']:.4f}s compile={res['compile_s']:.0f}s"
+                    )
+                elif status == "skipped":
+                    extra = f" ({res['reason']})"
+                else:
+                    extra = f" ({res['error'][:120]})"
+                print(f"[{status}] {tag}{extra}", flush=True)
+
+    if failures:
+        print(f"FAILED cells: {failures}")
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of a cell —
+weak-type-correct, shardable, zero allocation. The dry-run lowers against these."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models.model import init_cache, init_params
+from ..train.step import TrainConfig, init_train_state
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Training/prefill batch stand-ins. For [vlm] the 256-patch stub is part of the
+    sequence budget (text tokens = seq - n_frontend); for [audio] the frames feed the
+    encoder and the decoder consumes the full seq."""
+    b, s = shape.batch, shape.seq
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "prefix_embeds":
+        s_text = s - cfg.n_frontend
+        out["tokens"] = _sds((b, s_text), jnp.int32)
+        out["labels"] = _sds((b, s_text), jnp.int32)
+        out["vision_embeds"] = _sds((b, cfg.n_frontend, cfg.d_model), jnp.float32)
+    elif cfg.frontend == "encoder_frames":
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["labels"] = _sds((b, s), jnp.int32)
+        out["frames"] = _sds((b, cfg.n_frontend, cfg.d_model), jnp.float32)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+        out["labels"] = _sds((b, s), jnp.int32)
+    if shape.kind == "prefill":
+        out.pop("labels")
+    return out
+
+
+def params_specs(cfg: ArchConfig):
+    return jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def opt_specs(cfg: ArchConfig, tcfg: TrainConfig, params_sds):
+    return jax.eval_shape(partial(init_train_state, cfg, tcfg), params_sds)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Decode-cell cache stand-ins: a full context of shape.seq tokens."""
+    return jax.eval_shape(lambda: init_cache(cfg, shape.batch, shape.seq))
+
+
+def decode_token_specs(shape: ShapeSpec):
+    return _sds((shape.batch,), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, tcfg: TrainConfig | None = None):
+    """Everything the jitted step needs, as ShapeDtypeStructs, keyed by step kind."""
+    tcfg = tcfg or TrainConfig()
+    if shape.kind == "train":
+        p = params_specs(cfg)
+        return {
+            "params": p,
+            "opt_state": opt_specs(cfg, tcfg, p),
+            "batch": batch_specs(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {"params": params_specs(cfg), "batch": batch_specs(cfg, shape)}
+    return {
+        "params": params_specs(cfg),
+        "cache": cache_specs(cfg, shape),
+        "tokens": decode_token_specs(shape),
+    }

@@ -1,0 +1,30 @@
+"""Production mesh builders (functions, not module constants — importing this module
+never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+from ..distributed.ctx import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 = 256 chips (data, model). Multi-pod: 2×16×16 = 512 chips
+    (pod, data, model). The dry-run launcher sets XLA_FLAGS to fake 512 host devices
+    before any jax import; real deployments get the same mesh from the TPU topology."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    kinds = (jax.sharding.AxisType.Auto,) * len(axes)  # GSPMD propagation
+    return jax.make_mesh(shape, axes, axis_types=kinds)
+
+
+def axes_for(mesh, sequence_parallel: bool = False) -> MeshAxes:
+    names = mesh.axis_names
+    data = tuple(n for n in names if n != "model")
+    return MeshAxes(data=data, model="model", sequence_parallel=sequence_parallel)
+
+
+def make_mesh(shape, axis_names):
+    """Elastic-scaling entry: build a mesh of any geometry (restore reshards to it)."""
+    kinds = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(shape), tuple(axis_names), axis_types=kinds)

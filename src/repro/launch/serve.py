@@ -1,0 +1,64 @@
+"""Serving driver: batched prefill + decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, reduced_for_smoke
+from ..models.model import init_params, prefill
+from ..train.data import synth_batch
+from ..train.step import make_serve_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduced_for_smoke(cfg)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    raw = synth_batch(cfg, step=0, global_batch=args.batch, seq=args.prompt_len)
+    batch = {k: jnp.asarray(v) for k, v in raw.items() if k != "labels"}
+
+    cache_len = args.prompt_len + args.gen
+    t0 = time.time()
+    logits, cache = jax.jit(
+        lambda p, b: prefill(cfg, p, b, cache_len=cache_len)
+    )(params, batch)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+    print(f"[serve] prefill {args.batch}×{args.prompt_len} in {t_prefill:.2f}s")
+
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    outputs = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        tok, logits, cache = serve_step(params, cache, tok)
+        outputs.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    toks = args.batch * (args.gen - 1)
+    print(f"[serve] decoded {toks} tokens in {t_dec:.2f}s → {toks / max(t_dec,1e-9):,.0f} tok/s")
+    gen = np.stack(outputs, axis=1)
+    print(f"[serve] sample generation (first row): {gen[0][:16].tolist()}")
+    return {"gen": gen, "t_prefill": t_prefill, "t_decode": t_dec}
+
+
+if __name__ == "__main__":
+    main()

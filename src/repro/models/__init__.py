@@ -1,0 +1,15 @@
+"""Model substrate: the 10 assigned architectures as pure-pytree JAX models.
+
+Layout convention: scanned blocks hold parameters stacked over pattern repeats
+(leading dim R); `prefix` blocks are unrolled. Forward = embed → prefix blocks →
+lax.scan(pattern blocks × R) → norm → logits. Decode carries a stacked cache through
+the same scan.
+"""
+
+from .model import (
+    init_params,
+    model_forward,
+    init_cache,
+    prefill,
+    decode_step,
+)

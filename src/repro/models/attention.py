@@ -1,0 +1,292 @@
+"""Attention: GQA (full / sliding-window / bidirectional), MLA, cross-attention,
+and single-token decode paths.
+
+Train/prefill attention is *q-chunked with static KV spans*: the query axis is split
+into Python-unrolled chunks; each chunk attends to a statically-sliced KV span
+([0, (i+1)·C) for causal, an aligned window for SWA). This keeps peak memory at
+O(C · span) instead of O(S²) and gives SWA true O(S·w) compute — the jnp analogue of a
+flash kernel (the Pallas kernel in repro/kernels mirrors the same tiling).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import shard
+from .layers import apply_rope, rope_cos_sin
+
+
+def _attn_chunk(q, k, v, bias):
+    """q (B,Cq,H,Dk), k (B,Sk,KV,Dk), v (B,Sk,KV,Dv) → (B,Cq,H,Dv). Softmax in fp32.
+    Dv may differ from Dk (MLA)."""
+    b, cq, h, d = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[-1]
+    rep = h // kvh
+    qg = q.reshape(b, cq, kvh, rep, d)
+    scores = jnp.einsum(
+        "bqkrd,bskd->bkrqs", qg, k, preferred_element_type=jnp.float32
+    )  # fp32 accumulation, no separate convert pass over the S² tensor
+    scores = scores * (d ** -0.5)
+    if bias is not None:
+        scores = scores + bias  # (1,1,1,Cq,Sk) additive mask
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", w, v)
+    return out.reshape(b, cq, h, dv)
+
+
+def _causal_bias(q_start: int, cq: int, k_start: int, sk: int, window: int) -> Optional[jnp.ndarray]:
+    """Additive -inf mask for chunk rows [q_start, q_start+cq) over kv [k_start,
+    k_start+sk). Built from iota (never materialized as an HLO constant); returns None
+    when the whole span is statically visible to every row."""
+    fully_causal = (k_start + sk - 1) <= q_start
+    fully_in_window = window == 0 or k_start > (q_start + cq - 1) - window
+    if fully_causal and fully_in_window:
+        return None
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (cq, sk), 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (cq, sk), 1)
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, -1e30)[None, None, None, :, :].astype(jnp.float32)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    chunk: int = 2048,
+) -> jax.Array:
+    """q (B,S,H,D), k/v (B,S,KV,D). Python-unrolled q chunks, static KV spans."""
+    b, s, h, d = q.shape
+    c = min(chunk, s)
+    while s % c != 0:
+        c //= 2
+    n_chunks = s // c
+    outs = []
+    for i in range(n_chunks):
+        q_start = i * c
+        qc = q[:, q_start : q_start + c]
+        if not causal:
+            k_start, k_end = 0, s
+        elif window > 0:
+            lo = max(0, (q_start - window + 1) // c * c)
+            k_start, k_end = lo, q_start + c
+        else:
+            k_start, k_end = 0, q_start + c
+        ks = k[:, k_start:k_end]
+        vs = v[:, k_start:k_end]
+        bias = (
+            _causal_bias(q_start, c, k_start, k_end - k_start, window) if causal else None
+        )
+        outs.append(_attn_chunk(qc, ks, vs, bias))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def attn_params(cfg, key, dtype, kv_heads: Optional[int] = None) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    kv = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(k1, (d, h * hd), dtype) * s,
+        "wk": jax.random.normal(k2, (d, kv * hd), dtype) * s,
+        "wv": jax.random.normal(k3, (d, kv * hd), dtype) * s,
+        "wo": jax.random.normal(k4, (h * hd, d), dtype) * ((h * hd) ** -0.5),
+    }
+
+
+def _split_heads(cfg, x, n):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _shard_heads(cfg, x):
+    if cfg.shard_attn_heads:
+        return shard(x, "dp", None, "tp", None)
+    return shard(x, "dp", None, None, None)
+
+
+def attn_apply(
+    cfg,
+    p: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    causal: bool,
+    window: int,
+    rope_theta: float,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> jax.Array:
+    """Full GQA block (train/prefill). kv_override supplies cross-attention memory."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _shard_heads(cfg, _split_heads(cfg, x @ p["wq"], h))
+    if kv_override is None:
+        k = _split_heads(cfg, x @ p["wk"], kv)
+        v = _split_heads(cfg, x @ p["wv"], kv)
+        cos, sin = rope_cos_sin(positions, hd, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    else:
+        mem, mem_positions = kv_override
+        k = _split_heads(cfg, mem @ p["wk"], kv)
+        v = _split_heads(cfg, mem @ p["wv"], kv)
+        cos, sin = rope_cos_sin(positions, hd, rope_theta)
+        q = apply_rope(q, cos, sin)
+        mcos, msin = rope_cos_sin(mem_positions, hd, rope_theta)
+        k = apply_rope(k, mcos, msin)
+    k = shard(k, "dp", None, None, None)
+    v = shard(v, "dp", None, None, None)
+    out = chunked_attention(q, k, v, causal=causal, window=window)
+    out = _shard_heads(cfg, out)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, h * hd) @ p["wo"]
+
+
+def attn_kv_for_cache(cfg, p, x, positions, rope_theta):
+    """Project + rope k/v for prefill cache construction."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = _split_heads(cfg, x @ p["wk"], kv)
+    v = _split_heads(cfg, x @ p["wv"], kv)
+    cos, sin = rope_cos_sin(positions, hd, rope_theta)
+    return apply_rope(k, cos, sin), v
+
+
+def attn_decode(
+    cfg,
+    p: dict,
+    x: jax.Array,                 # (B, 1, d)
+    k_cache: jax.Array,           # (B, S, KV, hd) — seq sharded over tp ("sp"-like)
+    v_cache: jax.Array,
+    pos: jax.Array,               # scalar: current length
+    *,
+    window: int,
+    rope_theta: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. The cache is a rotating buffer of size S_max (window layers:
+    S_max = window). Returns (out, new_k_cache, new_v_cache).
+
+    The softmax over the seq-sharded cache lowers to partial reductions + a small
+    all-reduce (flash-decoding split-KV; GSPMD derives it from the shardings)."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s_max = k_cache.shape[1]
+
+    q = _shard_heads(cfg, _split_heads(cfg, x @ p["wq"], h))
+    k_new = _split_heads(cfg, x @ p["wk"], kv)
+    v_new = _split_heads(cfg, x @ p["wv"], kv)
+    cos, sin = rope_cos_sin(pos[None], hd, rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    k_new = apply_rope(k_new, cos[None], sin[None])
+
+    slot = jnp.where(window > 0, pos % s_max, jnp.minimum(pos, s_max - 1))
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (0, slot, 0, 0))
+
+    rep = h // kv
+    qg = q.reshape(b, 1, kv, rep, hd)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k_cache).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    # validity: slots beyond the current position are padding until the buffer is
+    # full/rotating (pos ≥ s_max), after which every slot is live.
+    kpos = jnp.arange(s_max)
+    valid = (kpos[None, None, None, None, :] <= pos) | (pos >= s_max)
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", w, v_cache).reshape(b, 1, h * hd)
+    return out @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV cache
+# ---------------------------------------------------------------------------
+
+
+def mla_params(cfg, key, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r, nd, vd, rd = cfg.kv_lora, cfg.qk_nope_dim, cfg.v_head_dim, cfg.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * (nd + rd)), dtype) * s,
+        "w_dkv": jax.random.normal(ks[1], (d, r + rd), dtype) * s,   # latent + shared k_rope
+        "w_uk": jax.random.normal(ks[2], (r, h * nd), dtype) * (r ** -0.5),
+        "w_uv": jax.random.normal(ks[3], (r, h * vd), dtype) * (r ** -0.5),
+        "wo": jax.random.normal(ks[4], (h * vd, d), dtype) * ((h * vd) ** -0.5),
+    }
+
+
+def mla_apply(cfg, p, x, *, positions, rope_theta) -> jax.Array:
+    """Train/prefill MLA (expanded form)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    r, nd, vd, rd = cfg.kv_lora, cfg.qk_nope_dim, cfg.v_head_dim, cfg.qk_rope_dim
+
+    q = (x @ p["wq"]).reshape(b, s, h, nd + rd)
+    q = shard(q, "dp", None, "tp", None)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    ckv = x @ p["w_dkv"]                    # (B,S,r+rd)
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    cos, sin = rope_cos_sin(positions, rd, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[..., None, :], cos, sin)  # (B,S,1,rd) shared head
+
+    k_nope = (c @ p["w_uk"]).reshape(b, s, h, nd)
+    v = (c @ p["w_uv"]).reshape(b, s, h, vd)
+    k_nope = shard(k_nope, "dp", None, "tp", None)
+    v = shard(v, "dp", None, "tp", None)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, rd))], axis=-1)
+    out = chunked_attention(q_full, k_full, v, causal=True, window=0)
+    return out.reshape(b, s, h * vd) @ p["wo"]
+
+
+def mla_decode(
+    cfg, p, x, c_cache, kr_cache, pos, *, rope_theta
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-matrix MLA decode: scores against the 512-d latent cache directly —
+    the cache per token is (kv_lora + rope_dim) values, the paper's headline saving."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    r, nd, vd, rd = cfg.kv_lora, cfg.qk_nope_dim, cfg.v_head_dim, cfg.qk_rope_dim
+    s_max = c_cache.shape[1]
+
+    q = (x @ p["wq"]).reshape(b, 1, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    cos, sin = rope_cos_sin(pos[None], rd, rope_theta)
+    q_rope = apply_rope(q_rope, cos[None], sin[None])
+
+    ckv = x @ p["w_dkv"]
+    c_new, kr_new = ckv[..., :r], ckv[..., r:]
+    kr_new = apply_rope(kr_new[..., None, :], cos[None], sin[None])[..., 0, :]
+    slot = jnp.minimum(pos, s_max - 1)
+    c_cache = jax.lax.dynamic_update_slice(c_cache, c_new, (0, slot, 0))
+    kr_cache = jax.lax.dynamic_update_slice(kr_cache, kr_new, (0, slot, 0))
+
+    # absorb W_uk into q: q_eff (B,h,r)
+    w_uk = p["w_uk"].reshape(r, h, nd)
+    q_eff = jnp.einsum("bqhn,rhn->bhr", q_nope, w_uk)
+    scores = jnp.einsum("bhr,bsr->bhs", q_eff, c_cache).astype(jnp.float32)
+    scores = scores + jnp.einsum("bqhd,bsd->bhs", q_rope, kr_cache).astype(jnp.float32)
+    scores = scores * ((nd + rd) ** -0.5)
+    kpos = jnp.arange(s_max)
+    valid = (kpos[None, None, :] <= pos) | (pos >= s_max)
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, c_cache)
+    w_uv = p["w_uv"].reshape(r, h, vd)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, w_uv).reshape(b, 1, h * vd)
+    return out @ p["wo"], c_cache, kr_cache

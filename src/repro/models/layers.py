@@ -1,0 +1,197 @@
+"""Shared layers: norms, rotary embeddings, MLPs, embedding/logits, loss."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import shard
+
+
+@jax.custom_vjp
+def _bf16_barrier(x):
+    return x
+
+
+def _bf16_barrier_fwd(x):
+    return x, None
+
+
+def _bf16_barrier_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+_bf16_barrier.defvjp(_bf16_barrier_fwd, _bf16_barrier_bwd)
+
+
+def grad_dtype_barrier(x: jax.Array) -> jax.Array:
+    """Identity forward; casts the cotangent to bf16 on the way back.
+
+    fp32 'contagion': any fp32-accumulating op (norm statistics, attention scores)
+    emits an fp32 cotangent contribution; the accumulated residual-stream gradient
+    then promotes to fp32 and every backward collective/HBM pass moves 2× bytes.
+    A per-block barrier caps the promotion — the standard bf16-gradient-stream
+    discipline (§Perf mistral iteration 4: halved the dominant collective term)."""
+    if x.dtype != jnp.bfloat16:
+        return x
+    return _bf16_barrier(x)
+
+
+@jax.custom_vjp
+def _rms_core(x, scale):
+    d = x.shape[-1]
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(ss[..., None] / d + 1e-6)
+    return x * inv.astype(x.dtype) * (1.0 + scale).astype(x.dtype)
+
+
+def _rms_core_fwd(x, scale):
+    d = x.shape[-1]
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    inv = jax.lax.rsqrt(ss[..., None] / d + 1e-6)
+    y = x * inv.astype(x.dtype) * (1.0 + scale).astype(x.dtype)
+    return y, (x, inv, scale)
+
+
+def _rms_core_bwd(res, g):
+    """Closed-form backward in the stream dtype (fp32 only for the (…,1) stats and
+    the scale grad): d_x = s·inv·g − x·inv³·⟨s·g, x⟩/d. Keeping d_x in bf16 stops the
+    fp32-cotangent contagion of the residual stream (§Perf mistral iteration 4)."""
+    x, inv, scale = res
+    d = x.shape[-1]
+    s1 = (1.0 + scale).astype(x.dtype)
+    gy = g.astype(x.dtype) * s1
+    dot = jnp.einsum("...d,...d->...", gy, x, preferred_element_type=jnp.float32)
+    coef = (inv ** 3) * (dot[..., None] / d)
+    d_x = gy * inv.astype(x.dtype) - x * coef.astype(x.dtype)
+    # scale grad: fp32 accumulation over all batch dims
+    xin = x * inv.astype(x.dtype)
+    bdims = tuple(range(g.ndim - 1))
+    d_scale = jnp.sum(
+        g.astype(jnp.float32) * xin.astype(jnp.float32), axis=bdims
+    ).astype(scale.dtype)
+    return d_x, d_scale
+
+
+_rms_core.defvjp(_rms_core_fwd, _rms_core_bwd)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 accumulation but no fp32 materialization of x (forward) and
+    a custom bf16 backward (see _rms_core_bwd)."""
+    return _rms_core(x, scale)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    d = x.shape[-1]
+    ones = jnp.ones((d,), x.dtype)
+    s1 = jnp.einsum("...d,d->...", x, ones, preferred_element_type=jnp.float32)
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    mu = s1[..., None] / d
+    var = ss[..., None] / d - jnp.square(mu)
+    inv = jax.lax.rsqrt(var + eps)
+    mu_c = mu.astype(x.dtype)
+    return (x - mu_c) * inv.astype(x.dtype) * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def apply_norm(cfg, x: jax.Array, p: dict) -> jax.Array:
+    # the barrier sits at the norm output: the SP all-gather (fwd) / reduce-scatter
+    # (bwd transpose) lives here, and the fp32 score/stat cotangents arrive here —
+    # casting at this edge keeps every stream collective in bf16 (§Perf).
+    if cfg.norm == "rms":
+        return grad_dtype_barrier(rms_norm(x, p["scale"]))
+    return grad_dtype_barrier(layer_norm(x, p["scale"], p["bias"]))
+
+
+def norm_params(cfg, d: int, dtype) -> dict:
+    if cfg.norm == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# -- rotary ------------------------------------------------------------------
+
+
+def rope_cos_sin(
+    positions: jax.Array, dim: int, theta: float
+) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) int32 → cos/sin (..., dim/2) float32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D); cos/sin (..., S, D/2) broadcast over heads (half-rotation)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)
+
+
+# -- MLP ----------------------------------------------------------------------
+
+
+def mlp_params(cfg, key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = d_model ** -0.5
+    p = {"w_out": jax.random.normal(k2, (d_ff, d_model), dtype) * (d_ff ** -0.5)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(k1, (d_model, d_ff), dtype) * scale
+        p["w_up"] = jax.random.normal(k3, (d_model, d_ff), dtype) * scale
+    else:
+        p["w_up"] = jax.random.normal(k1, (d_model, d_ff), dtype) * scale
+    return p
+
+
+def mlp_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """x (B, S, d) → (B, S, d); hidden sharded over tp."""
+    if cfg.act in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = shard(h, "dp", None, "tp")
+    return h @ p["w_out"]
+
+
+# -- embedding / logits / loss -------------------------------------------------
+
+
+def embed_params(cfg, key, dtype) -> dict:
+    e = jax.random.normal(key, (cfg.vocab_padded, cfg.d_model), dtype) * 0.02
+    return {"embedding": e}
+
+
+def embed_apply(cfg, p: dict, tokens: jax.Array) -> jax.Array:
+    x = p["embedding"][tokens]  # gather over vocab-sharded table
+    return shard(x, "dp", None, None)
+
+
+def logits_apply(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """(B, S, d) → (B, S, vocab_padded), vocab sharded over tp."""
+    logits = x @ p["embedding"].T.astype(x.dtype)
+    return shard(logits, "dp", None, "tp")
+
+
+def cross_entropy(cfg, logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over all positions; padded vocab ids masked out of the logsumexp.
+    logits stay vocab-sharded: logsumexp and the one-hot pick are sharded reductions
+    (GSPMD inserts partial-reduce + all-reduce; no full-vocab gather materializes)."""
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+    logits = jnp.where(iota[None, None, :] < cfg.vocab, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # label pick via masked sum (NOT take_along_axis: a gather on the vocab-sharded
+    # axis would make GSPMD all-gather the logits; the masked sum stays sharded)
+    picked = jnp.sum(
+        jnp.where(iota[None, None, :] == labels[..., None], logits, 0.0), axis=-1
+    )
+    return jnp.mean(lse - picked)

@@ -1,0 +1,277 @@
+"""Mamba-2 / SSD (state-space duality) block [arXiv:2405.21060], TPU-adapted.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel is replaced by the
+*chunked SSD* formulation — within a chunk of Q tokens the recurrence is a masked
+matmul (MXU work), across chunks a short associative scan carries the (H, P, N) state.
+This is the published SSD algorithm and is exactly the structure the Pallas kernel in
+repro/kernels/ssd.py tiles into VMEM.
+
+The depthwise causal conv is applied separately to the x / B / C streams (identical
+math to the fused conv — depthwise means per-channel — but keeps the tensor-parallel
+sharding of x clean; DESIGN.md §6).
+
+Shapes: x (B,S,H,P) with H = d_inner/headdim SSD heads, P = headdim; B̃/C (B,S,G,N)
+with G groups and N = d_state; dt (B,S,H) after softplus; A (H,) negative.
+
+Decode carries (conv states (B,k-1,·) per stream, ssm_state (B,H,P,N)) — O(1) per
+token, which is why the SSM archs run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import shard
+from .layers import rms_norm
+
+
+def mamba_params(cfg, key, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh = cfg.ssm_ngroups, cfg.d_state, cfg.ssm_nheads
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    return {
+        "w_z": jax.random.normal(ks[0], (d, di), dtype) * s,
+        "w_x": jax.random.normal(ks[1], (d, di), dtype) * s,
+        "w_B": jax.random.normal(ks[2], (d, g * n), dtype) * s,
+        "w_C": jax.random.normal(ks[3], (d, g * n), dtype) * s,
+        "w_dt": jax.random.normal(ks[4], (d, nh), dtype) * s,
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "conv_x": jax.random.normal(ks[5], (cfg.conv_k, di), dtype) * 0.1,
+        "conv_B": jax.random.normal(ks[6], (cfg.conv_k, g * n), dtype) * 0.1,
+        "conv_C": jax.random.normal(ks[7], (cfg.conv_k, g * n), dtype) * 0.1,
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "w_out": jax.random.normal(ks[8], (di, d), dtype) * (di ** -0.5),
+    }
+
+
+def _causal_conv(xs: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv + SiLU: xs (B,S,CH), w (K,CH)."""
+    k = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xs)
+    for i in range(k):
+        out = out + pad[:, i : i + xs.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out)
+
+
+def _conv_step(window: jax.Array, w: jax.Array) -> jax.Array:
+    """Single-position depthwise conv: window (B,K,CH), w (K,CH) → (B,1,CH)."""
+    return jax.nn.silu(jnp.sum(window * w[None], axis=1, keepdims=True))
+
+
+def _project(cfg, p, u):
+    """u (B,S,d) → z, x_pre, b_pre, c_pre, dt (pre-conv streams)."""
+    z = u @ p["w_z"]
+    x = u @ p["w_x"]
+    b = u @ p["w_B"]
+    c = u @ p["w_C"]
+    dt = jax.nn.softplus(
+        (u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )
+    return z, x, b, c, dt
+
+
+def ssd_chunked(
+    x: jax.Array,      # (B,S,H,P)
+    dt: jax.Array,     # (B,S,H) fp32
+    a: jax.Array,      # (H,) negative fp32
+    b_ssm: jax.Array,  # (B,S,G,N)
+    c_ssm: jax.Array,  # (B,S,G,N)
+    chunk: int,
+    init_state=None,   # (B,H,P,N) or None
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, pdim = x.shape
+    g, n = b_ssm.shape[2], b_ssm.shape[3]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    rep = h // g
+
+    xq = x.reshape(bsz, nc, q, h, pdim)
+    dtq = dt.reshape(bsz, nc, q, h)
+    bq = b_ssm.reshape(bsz, nc, q, g, n)
+    cq = c_ssm.reshape(bsz, nc, q, g, n)
+
+    da = dtq * a[None, None, None, :]                  # (B,nc,Q,H) fp32, ≤ 0
+    cum = jnp.cumsum(da, axis=2)                       # within-chunk cumulative
+    seg_sum = cum[:, :, -1, :]                         # (B,nc,H)
+
+    # decay L[i,j] = exp(cum_i - cum_j) for i ≥ j (intra-chunk)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    mask = (iota_i >= iota_j)[None, None, :, :, None]
+    # mask BEFORE exp: the i<j half has li>0 (exp→inf, and 0·inf=NaN in the VJP);
+    # valid entries are ≤ 0 so exp never overflows.
+    decay = jnp.exp(jnp.where(mask, li, -jnp.inf))
+
+    # Group-aware einsums: B̃/C are never expanded to H heads (ngroups=1 with 128
+    # heads would otherwise materialize S·H·N tensors — the §Perf jamba fix).
+    # Heads factor as H = G groups × R heads-per-group.
+    xg = xq.reshape(bsz, nc, q, g, rep, pdim)
+    dtg = dtq.reshape(bsz, nc, q, g, rep)
+
+    # intra-chunk: y[i] += Σ_j≤i (C_i·B_j)[g] decay(i,j)[g,r] dt_j[g,r] x_j[g,r]
+    cb = jnp.einsum(
+        "bcign,bcjgn->bcijg", cq, bq, preferred_element_type=jnp.float32
+    )                                                   # (B,nc,Q,Q,G) — no H expansion
+    w_ij = cb[..., None] * decay.reshape(bsz, nc, q, q, g, rep) \
+        * dtg[:, :, None, :, :, :]                      # (B,nc,Q,Q,G,R)
+    y_diag = jnp.einsum("bcijgr,bcjgrp->bcigrp", w_ij.astype(x.dtype), xg)
+
+    # chunk summaries: S_c = Σ_j exp(seg - cum_j) dt_j B_j ⊗ x_j   (B,nc,G,R,P,N)
+    decay_tail = jnp.exp(seg_sum[:, :, None, :] - cum)  # (B,nc,Q,H)
+    wdt = (decay_tail * dtq).reshape(bsz, nc, q, g, rep)
+    s_c = jnp.einsum(
+        "bcjgr,bcjgn,bcjgrp->bcgrpn", wdt.astype(x.dtype), bq, xg
+    ).reshape(bsz, nc, h, pdim, n)
+
+    # inter-chunk recurrence: states[c] = exp(seg_c)·states[c-1] + S_c
+    gamma = jnp.exp(seg_sum)                            # (B,nc,H)
+
+    def combine(left, right):
+        gl, sl = left
+        gr, sr = right
+        return gl * gr, sr + sl * gr[..., None, None].astype(sl.dtype)
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, pdim, n), x.dtype)
+    g_scan, s_scan = jax.lax.associative_scan(combine, (gamma, s_c), axis=1)
+    # state entering chunk c: inclusive-scan of chunks < c, with init_state decayed in
+    prev = jnp.concatenate(
+        [
+            init_state[:, None],
+            s_scan[:, :-1]
+            + init_state[:, None] * g_scan[:, :-1][..., None, None].astype(x.dtype),
+        ],
+        axis=1,
+    )
+
+    # inter-chunk contribution: y[i] += C_i · exp(cum_i) · prev_state
+    decay_head = jnp.exp(cum).reshape(bsz, nc, q, g, rep)  # fp32
+    prev_g = prev.reshape(bsz, nc, g, rep, pdim, n)
+    y_off = jnp.einsum(
+        "bcign,bcigr,bcgrpn->bcigrp",
+        cq.astype(x.dtype), decay_head.astype(x.dtype), prev_g,
+    )
+
+    y = (y_diag + y_off).reshape(bsz, s, h, pdim)
+    final_state = s_scan[:, -1] + init_state * g_scan[:, -1][..., None, None].astype(x.dtype)
+    return y, final_state
+
+
+def ssd_reference(x, dt, a, b_ssm, c_ssm, init_state=None):
+    """Naive per-token recurrence (the oracle for the chunked path and the Pallas
+    kernel): h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ; y_t = C_t · h_t."""
+    bsz, s, h, pdim = x.shape
+    g, n = b_ssm.shape[2], b_ssm.shape[3]
+    rep = h // g
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+    init_state = init_state.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P) (B,H) (B,G,N) (B,G,N)
+        btg = jnp.repeat(bt, rep, axis=1)
+        ctg = jnp.repeat(ct, rep, axis=1)
+        decay = jnp.exp(dtt * a[None, :])[..., None, None]
+        upd = dtt[..., None, None] * jnp.einsum("bhp,bhn->bhpn", xt, btg)
+        state = decay * state + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ctg)
+        return state, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2),
+        b_ssm.transpose(1, 0, 2, 3).astype(jnp.float32),
+        c_ssm.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final.astype(x.dtype)
+
+
+def _ssd_run(cfg, p, z, x_conv, b_conv, c_conv, dt, init_state=None):
+    bsz, s, _ = x_conv.shape
+    h, pdim = cfg.ssm_nheads, cfg.ssm_headdim
+    x4 = shard(x_conv.reshape(bsz, s, h, pdim), "dp", None, "tp", None)
+    b4 = b_conv.reshape(bsz, s, cfg.ssm_ngroups, cfg.d_state)
+    c4 = c_conv.reshape(bsz, s, cfg.ssm_ngroups, cfg.d_state)
+    a = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(x4, dt, a, b4, c4, cfg.ssd_chunk, init_state=init_state)
+    y = y + x4 * p["D"][None, None, :, None].astype(x4.dtype)
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["w_out"], state
+
+
+def mamba_apply(cfg, p: dict, u: jax.Array) -> jax.Array:
+    """Train forward (B,S,d) → (B,S,d)."""
+    z, x, b, c, dt = _project(cfg, p, u)
+    x = shard(_causal_conv(x, p["conv_x"]), "dp", None, "tp")
+    b = _causal_conv(b, p["conv_B"])
+    c = _causal_conv(c, p["conv_C"])
+    out, _ = _ssd_run(cfg, p, z, x, b, c, dt)
+    return out
+
+
+def mamba_prefill(cfg, p, u):
+    """Forward + decode state (conv windows are the last k-1 *pre-conv* positions)."""
+    z, x, b, c, dt = _project(cfg, p, u)
+    k = cfg.conv_k
+    conv_state = {
+        "x": x[:, -(k - 1) :, :],
+        "B": b[:, -(k - 1) :, :],
+        "C": c[:, -(k - 1) :, :],
+    }
+    xc = _causal_conv(x, p["conv_x"])
+    bc = _causal_conv(b, p["conv_B"])
+    cc = _causal_conv(c, p["conv_C"])
+    out, state = _ssd_run(cfg, p, z, xc, bc, cc, dt)
+    return out, conv_state, state
+
+
+def mamba_decode(
+    cfg, p: dict, u: jax.Array, conv_state: dict, ssm_state: jax.Array
+) -> Tuple[jax.Array, dict, jax.Array]:
+    """One token: u (B,1,d); conv_state {x,B,C: (B,k-1,·)}; ssm_state (B,H,P,N)."""
+    bsz = u.shape[0]
+    h, pdim = cfg.ssm_nheads, cfg.ssm_headdim
+    z, x_new, b_new, c_new, dt = _project(cfg, p, u)
+
+    new_conv = {}
+    outs = {}
+    for name, new, w in (
+        ("x", x_new, p["conv_x"]),
+        ("B", b_new, p["conv_B"]),
+        ("C", c_new, p["conv_C"]),
+    ):
+        window = jnp.concatenate([conv_state[name], new], axis=1)  # (B,k,CH)
+        new_conv[name] = window[:, 1:, :]
+        outs[name] = _conv_step(window, w)
+
+    x = outs["x"].reshape(bsz, h, pdim)
+    rep = h // cfg.ssm_ngroups
+    bt = jnp.repeat(outs["B"].reshape(bsz, cfg.ssm_ngroups, cfg.d_state), rep, axis=1)
+    ct = jnp.repeat(outs["C"].reshape(bsz, cfg.ssm_ngroups, cfg.d_state), rep, axis=1)
+    a = -jnp.exp(p["A_log"])
+    dtt = dt[:, 0, :]                              # (B,H)
+    decay = jnp.exp(dtt * a[None, :])[..., None, None].astype(ssm_state.dtype)
+    upd = (
+        dtt[..., None, None]
+        * jnp.einsum("bhp,bhn->bhpn", x.astype(jnp.float32), bt.astype(jnp.float32))
+    ).astype(ssm_state.dtype)
+    ssm_state = decay * ssm_state + upd
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, ct.astype(ssm_state.dtype)).astype(u.dtype)
+    y = y + x * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, 1, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["w_out"], new_conv, ssm_state

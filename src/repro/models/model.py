@@ -1,0 +1,513 @@
+"""Model orchestration: embed → prefix blocks → scan(pattern × R) → norm → logits.
+
+Parameters:
+  {"embed": …, "final_norm": …,
+   "prefix":  [block_params, …]                    # unrolled (e.g. DeepSeek layer 0)
+   "blocks":  {"pos0": stacked(R), "pos1": …},     # one entry per pattern position
+   "encoder": {"frames_norm": …, "blocks": stacked(R_enc), "final_norm": …}}  # encdec
+
+Caches mirror "blocks"/"prefix" with stacked leading R; decode runs the same scan with
+the cache threaded as scan xs/ys. Whisper decoder blocks carry self-attn + cross-attn
+(cross K/V precomputed at prefill)."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import shard
+from .attention import (
+    attn_apply,
+    attn_decode,
+    attn_kv_for_cache,
+    attn_params,
+    mla_apply,
+    mla_decode,
+    mla_params,
+)
+from .layers import (
+    apply_norm,
+    cross_entropy,
+    embed_apply,
+    embed_params,
+    grad_dtype_barrier,
+    logits_apply,
+    mlp_apply,
+    mlp_params,
+    norm_params,
+)
+from .mamba import mamba_apply, mamba_decode, mamba_params, mamba_prefill
+from .moe import moe_apply, moe_params
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _block_params(cfg, spec, key, with_cross: bool):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": norm_params(cfg, cfg.d_model, dt)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn_params(cfg, ks[0], dt)
+    elif spec.mixer == "mla":
+        p["mixer"] = mla_params(cfg, ks[0], dt)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mamba_params(cfg, ks[0], dt)
+    else:
+        raise ValueError(spec.mixer)
+    if with_cross and spec.mixer in ("attn", "mla"):
+        p["norm_cross"] = norm_params(cfg, cfg.d_model, dt)
+        p["cross"] = attn_params(cfg, ks[1], dt)
+    if spec.ffn:
+        p["norm2"] = norm_params(cfg, cfg.d_model, dt)
+        if spec.moe:
+            p["moe"] = moe_params(cfg, ks[2], dt)
+        else:
+            p["ffn"] = mlp_params(cfg, ks[2], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_params(cfg, keys[0], dt),
+        "final_norm": norm_params(cfg, cfg.d_model, dt),
+    }
+    with_cross = cfg.is_encdec
+    params["prefix"] = [
+        _block_params(cfg, spec, k, with_cross)
+        for spec, k in zip(cfg.prefix, jax.random.split(keys[1], max(1, len(cfg.prefix))))
+    ]
+    blocks = {}
+    r = cfg.n_repeats
+    for i, spec in enumerate(cfg.pattern):
+        pos_keys = jax.random.split(jax.random.fold_in(keys[2], i), r)
+        blocks[f"pos{i}"] = jax.vmap(
+            lambda k, s=spec: _block_params(cfg, s, k, with_cross)
+        )(pos_keys)
+    params["blocks"] = blocks
+    if cfg.is_encdec:
+        from ..configs.base import BlockSpec
+
+        enc_spec = BlockSpec(mixer="attn", window=0)
+        enc_keys = jax.random.split(keys[3], cfg.n_enc_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: _block_params(cfg, enc_spec, k, with_cross=False)
+            )(enc_keys),
+            "final_norm": norm_params(cfg, cfg.d_model, dt),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(
+    cfg,
+    spec,
+    p,
+    x,
+    positions,
+    *,
+    causal: bool = True,
+    enc_out=None,
+    enc_positions=None,
+):
+    """Returns (x, aux_loss). With sp_boundary="layer", the residual is re-sharded
+    on the sequence axis only once per block (1 all-gather + 1 reduce-scatter instead
+    of one pair per sub-block) — §Perf mistral iteration 3."""
+    aux = jnp.zeros((), jnp.float32)
+    sub = cfg.sp_boundary != "layer"
+
+    def reshard(t):
+        return shard(t, "dp", "sp", None) if sub else t
+
+    h = apply_norm(cfg, x, p["norm1"])
+    if spec.mixer == "attn":
+        h = attn_apply(
+            cfg, p["mixer"], h,
+            positions=positions, causal=causal,
+            window=spec.window, rope_theta=spec.rope_theta,
+        )
+    elif spec.mixer == "mla":
+        h = mla_apply(cfg, p["mixer"], h, positions=positions, rope_theta=spec.rope_theta)
+    else:
+        h = mamba_apply(cfg, p["mixer"], h)
+    x = reshard(x + h)
+
+    if enc_out is not None and "cross" in p:
+        h = apply_norm(cfg, x, p["norm_cross"])
+        h = attn_apply(
+            cfg, p["cross"], h,
+            positions=positions, causal=False, window=0,
+            rope_theta=spec.rope_theta,
+            kv_override=(enc_out, enc_positions),
+        )
+        x = reshard(x + h)
+
+    if spec.ffn:
+        h = apply_norm(cfg, x, p["norm2"])
+        if spec.moe:
+            h, aux = moe_apply(cfg, p["moe"], h)
+        else:
+            h = mlp_apply(cfg, p["ffn"], h)
+        x = x + h
+        x = shard(x, "dp", "sp", None)   # block boundary: always constrained
+    else:
+        x = shard(x, "dp", "sp", None)
+    x = grad_dtype_barrier(x)            # cap fp32 cotangent contagion per block
+    return x, aux
+
+
+def _remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_encoder(cfg, params, frames):
+    """Whisper-style encoder over stub frame embeddings (B, F, d)."""
+    x = frames.astype(_dtype(cfg))
+    x = shard(x, "dp", None, None)
+    positions = jnp.arange(frames.shape[1])[None, :]
+    enc = params["encoder"]
+    from ..configs.base import BlockSpec
+
+    spec = BlockSpec(mixer="attn", window=0)
+
+    def body(carry, layer_params):
+        y, _ = _block_apply(cfg, spec, layer_params, carry, positions, causal=False)
+        return y, None
+
+    body = _remat_wrap(cfg, body)
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return apply_norm(cfg, x, enc["final_norm"])
+
+
+def _embed_input(cfg, params, batch):
+    """tokens (+ frontend stubs) → x (B, S_total, d), positions (B or 1, S_total)."""
+    tokens = batch["tokens"]
+    x = embed_apply(cfg, params["embed"], tokens)
+    if cfg.frontend == "prefix_embeds":
+        vis = batch["vision_embeds"].astype(x.dtype)   # (B, F, d)
+        x = jnp.concatenate([vis, x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+    return shard(x, "dp", "sp", None), positions
+
+
+def model_forward(cfg, params, batch) -> Tuple[jax.Array, jax.Array]:
+    """→ (logits (B, S_total, vocab_padded), aux_loss scalar)."""
+    x, positions = _embed_input(cfg, params, batch)
+    enc_out = enc_positions = None
+    if cfg.is_encdec:
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+        enc_positions = jnp.arange(enc_out.shape[1])[None, :]
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for spec, p in zip(cfg.prefix, params["prefix"]):
+        x, aux = _block_apply(
+            cfg, spec, p, x, positions, enc_out=enc_out, enc_positions=enc_positions
+        )
+        aux_total = aux_total + aux
+
+    def body(carry, layer_params):
+        y, aux_acc = carry
+        aux_step = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(cfg.pattern):
+            y, aux = _block_apply(
+                cfg, spec, layer_params[f"pos{i}"], y, positions,
+                enc_out=enc_out, enc_positions=enc_positions,
+            )
+            aux_step = aux_step + aux
+        return (y, aux_acc + aux_step), None
+
+    body = _remat_wrap(cfg, body)
+    (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["blocks"])
+
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = logits_apply(cfg, params["embed"], x)
+    return logits, aux_total
+
+
+def loss_fn(cfg, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = model_forward(cfg, params, batch)
+    # next-token CE on the text region (frontend prefix positions excluded)
+    s_text = batch["labels"].shape[1]
+    logits_text = logits[:, -s_text:, :]
+    ce = cross_entropy(cfg, logits_text[:, :-1], batch["labels"][:, 1:])
+    loss = ce + 0.01 * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# cache + decode
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(cfg, spec, batch: int, s_max: int, dt, with_cross: bool, n_frontend: int):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    s_c = min(spec.window, s_max) if spec.window > 0 else s_max
+    if spec.mixer == "attn":
+        c = {
+            "k": jnp.zeros((batch, s_c, kv, hd), dt),
+            "v": jnp.zeros((batch, s_c, kv, hd), dt),
+        }
+    elif spec.mixer == "mla":
+        c = {
+            "c": jnp.zeros((batch, s_max, cfg.kv_lora), dt),
+            "kr": jnp.zeros((batch, s_max, cfg.qk_rope_dim), dt),
+        }
+    else:
+        g, n = cfg.ssm_ngroups, cfg.d_state
+        c = {
+            "conv_x": jnp.zeros((batch, cfg.conv_k - 1, cfg.d_inner), dt),
+            "conv_B": jnp.zeros((batch, cfg.conv_k - 1, g * n), dt),
+            "conv_C": jnp.zeros((batch, cfg.conv_k - 1, g * n), dt),
+            "state": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, n), dt),
+        }
+    if with_cross and spec.mixer in ("attn", "mla"):
+        c["cross_k"] = jnp.zeros((batch, n_frontend, kv, hd), dt)
+        c["cross_v"] = jnp.zeros((batch, n_frontend, kv, hd), dt)
+    return c
+
+
+def init_cache(cfg, batch: int, s_max: int) -> Dict[str, Any]:
+    """Zero cache sized for a context of s_max tokens."""
+    dt = _dtype(cfg)
+    cross = cfg.is_encdec
+    cache: Dict[str, Any] = {
+        "pos": jnp.zeros((), jnp.int32),
+        "prefix": [
+            _block_cache(cfg, spec, batch, s_max, dt, cross, cfg.n_frontend)
+            for spec in cfg.prefix
+        ],
+        "blocks": {},
+    }
+    r = cfg.n_repeats
+    for i, spec in enumerate(cfg.pattern):
+        one = _block_cache(cfg, spec, batch, s_max, dt, cross, cfg.n_frontend)
+        cache["blocks"][f"pos{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (r,) + a.shape), one
+        )
+    if cfg.is_encdec:
+        cache["enc_out"] = jnp.zeros((batch, cfg.n_frontend, cfg.d_model), dt)
+    return cache
+
+
+def _block_decode(cfg, spec, p, c, x, pos, enc_out):
+    """One-token decode through one block. Returns (x, new_cache)."""
+    h = apply_norm(cfg, x, p["norm1"])
+    new_c = dict(c)
+    if spec.mixer == "attn":
+        h, k2, v2 = attn_decode(
+            cfg, p["mixer"], h, c["k"], c["v"], pos,
+            window=spec.window, rope_theta=spec.rope_theta,
+        )
+        new_c["k"], new_c["v"] = k2, v2
+    elif spec.mixer == "mla":
+        h, c2, kr2 = mla_decode(
+            cfg, p["mixer"], h, c["c"], c["kr"], pos, rope_theta=spec.rope_theta
+        )
+        new_c["c"], new_c["kr"] = c2, kr2
+    else:
+        conv = {"x": c["conv_x"], "B": c["conv_B"], "C": c["conv_C"]}
+        h, conv2, st2 = mamba_decode(cfg, p["mixer"], h, conv, c["state"])
+        new_c["conv_x"], new_c["conv_B"], new_c["conv_C"] = conv2["x"], conv2["B"], conv2["C"]
+        new_c["state"] = st2
+    x = x + h
+
+    if enc_out is not None and "cross" in p:
+        h = apply_norm(cfg, x, p["norm_cross"])
+        # cross attention against the precomputed (cached) encoder K/V
+        b = x.shape[0]
+        hq = cfg.n_heads
+        from .attention import _shard_heads, _split_heads
+        from .layers import rope_cos_sin
+        from .attention import apply_rope
+
+        q = _shard_heads(cfg, _split_heads(cfg, h @ p["cross"]["wq"], hq))
+        cos, sin = rope_cos_sin(pos[None], cfg.head_dim, spec.rope_theta)
+        q = apply_rope(q, cos[None], sin[None])
+        k, v = c["cross_k"], c["cross_v"]
+        rep = hq // cfg.n_kv_heads
+        qg = q.reshape(b, 1, cfg.n_kv_heads, rep, cfg.head_dim)
+        scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
+        w = jax.nn.softmax(scores * (cfg.head_dim ** -0.5), axis=-1).astype(x.dtype)
+        o = jnp.einsum("bkrqs,bskd->bqkrd", w, v).reshape(b, 1, hq * cfg.head_dim)
+        x = x + o @ p["cross"]["wo"]
+
+    if spec.ffn:
+        h = apply_norm(cfg, x, p["norm2"])
+        if spec.moe:
+            h, _ = moe_apply(cfg, p["moe"], h)
+        else:
+            h = mlp_apply(cfg, p["ffn"], h)
+        x = x + h
+    return x, new_c
+
+
+def decode_step(cfg, params, cache, tokens_last: jax.Array):
+    """tokens_last (B,) → (logits (B, vocab_padded), new cache). One serve step."""
+    pos = cache["pos"]
+    x = embed_apply(cfg, params["embed"], tokens_last[:, None])  # (B,1,d)
+    enc_out = cache.get("enc_out") if cfg.is_encdec else None
+
+    new_prefix = []
+    for spec, p, c in zip(cfg.prefix, params["prefix"], cache["prefix"]):
+        x, c2 = _block_decode(cfg, spec, p, c, x, pos, enc_out)
+        new_prefix.append(c2)
+
+    def body(x, xs):
+        layer_params, layer_cache = xs
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, c2 = _block_decode(
+                cfg, spec, layer_params[f"pos{i}"], layer_cache[f"pos{i}"], x, pos, enc_out
+            )
+            new_cache[f"pos{i}"] = c2
+        return x, new_cache
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = logits_apply(cfg, params["embed"], x)[:, 0, :]
+    new_cache = dict(cache)
+    new_cache["prefix"] = new_prefix
+    new_cache["blocks"] = new_blocks
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward + cache construction
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg, params, batch, cache_len: Optional[int] = None) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run the context through the model, returning (last-token logits, cache).
+    ``cache_len`` reserves decode headroom (defaults to the context length — the
+    steady-state serving shapes, where each new token recycles the last slot)."""
+    x, positions = _embed_input(cfg, params, batch)
+    bsz, s_total = x.shape[0], x.shape[1]
+    c_len = cache_len if cache_len is not None else s_total
+    enc_out = enc_positions = None
+    if cfg.is_encdec:
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+        enc_positions = jnp.arange(enc_out.shape[1])[None, :]
+
+    def run_block(spec, p, x):
+        """Returns (x, cache_entry) for one block."""
+        h = apply_norm(cfg, x, p["norm1"])
+        entry = {}
+        if spec.mixer == "attn":
+            k, v = attn_kv_for_cache(cfg, p["mixer"], h, positions, spec.rope_theta)
+            s_c = min(spec.window, c_len) if spec.window > 0 else c_len
+            if s_total >= s_c:
+                k_c, v_c = k[:, -s_c:], v[:, -s_c:]
+                if 0 < spec.window and s_total % s_c:
+                    # rotating-buffer layout: position q lives at slot q % s_c
+                    shift = s_total % s_c
+                    k_c = jnp.roll(k_c, shift, axis=1)
+                    v_c = jnp.roll(v_c, shift, axis=1)
+            else:
+                pad = [(0, 0), (0, s_c - s_total), (0, 0), (0, 0)]
+                k_c, v_c = jnp.pad(k, pad), jnp.pad(v, pad)
+            entry["k"], entry["v"] = k_c, v_c
+            h = attn_apply(
+                cfg, p["mixer"], h,
+                positions=positions, causal=True,
+                window=spec.window, rope_theta=spec.rope_theta,
+            )
+            x = x + h
+        elif spec.mixer == "mla":
+            ckv = h @ p["mixer"]["w_dkv"]
+            c_lat, k_rope = ckv[..., : cfg.kv_lora], ckv[..., cfg.kv_lora :]
+            from .attention import apply_rope
+            from .layers import rope_cos_sin
+
+            cos, sin = rope_cos_sin(positions, cfg.qk_rope_dim, spec.rope_theta)
+            kr = apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]
+            if c_len > s_total:
+                pad2 = [(0, 0), (0, c_len - s_total), (0, 0)]
+                c_lat, kr = jnp.pad(c_lat, pad2), jnp.pad(kr, pad2)
+            entry["c"] = c_lat
+            entry["kr"] = kr
+            h = mla_apply(cfg, p["mixer"], h, positions=positions, rope_theta=spec.rope_theta)
+            x = x + h
+        else:
+            h, conv_state, st = mamba_prefill(cfg, p["mixer"], h)
+            entry["conv_x"], entry["conv_B"], entry["conv_C"] = (
+                conv_state["x"], conv_state["B"], conv_state["C"],
+            )
+            entry["state"] = st
+            x = x + h
+        x = shard(x, "dp", "sp", None)
+
+        if enc_out is not None and "cross" in p:
+            hc = apply_norm(cfg, x, p["norm_cross"])
+            ck, cv = attn_kv_for_cache(cfg, p["cross"], enc_out, enc_positions, spec.rope_theta)
+            entry["cross_k"], entry["cross_v"] = ck, cv
+            hc = attn_apply(
+                cfg, p["cross"], hc,
+                positions=positions, causal=False, window=0,
+                rope_theta=spec.rope_theta,
+                kv_override=(enc_out, enc_positions),
+            )
+            x = x + hc
+            x = shard(x, "dp", "sp", None)
+
+        if spec.ffn:
+            h2 = apply_norm(cfg, x, p["norm2"])
+            if spec.moe:
+                h2, _ = moe_apply(cfg, p["moe"], h2)
+            else:
+                h2 = mlp_apply(cfg, p["ffn"], h2)
+            x = x + h2
+            x = shard(x, "dp", "sp", None)
+        return x, entry
+
+    prefix_cache = []
+    for spec, p in zip(cfg.prefix, params["prefix"]):
+        x, entry = run_block(spec, p, x)
+        prefix_cache.append(entry)
+
+    def body(x, layer_params):
+        entries = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, entry = run_block(spec, layer_params[f"pos{i}"], x)
+            entries[f"pos{i}"] = entry
+        return x, entries
+
+    body = _remat_wrap(cfg, body)
+    x, block_cache = jax.lax.scan(body, x, params["blocks"])
+
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = logits_apply(cfg, params["embed"], x[:, -1:, :])[:, 0, :]
+
+    cache: Dict[str, Any] = {
+        "pos": jnp.array(s_total, jnp.int32),
+        "prefix": prefix_cache,
+        "blocks": block_cache,
+    }
+    if cfg.is_encdec:
+        cache["enc_out"] = enc_out
+    return logits, cache

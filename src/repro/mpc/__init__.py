@@ -1,0 +1,9 @@
+"""Exact-cost MPC runtime: machines, rounds, load metering, and the paper's algorithms.
+
+The simulator is the *paper-faithful* execution substrate: the MPC model's cost metric is
+"max words received by any machine in a round" (paper Sec. 1.1) — a communication metric
+that must be metered exactly to validate the Õ(m/p^{1/ρ}) claim. The JAX data plane
+(repro.dataplane) mirrors the communication-heavy phases on a device mesh.
+"""
+
+from .simulator import MPCSimulator, HashFamily

@@ -1,0 +1,193 @@
+"""HyperCube routing (Lemma 3.3 / BKS one-round algorithm).
+
+Machines form a grid with one dimension per attribute; a tuple of relation with scheme
+{X, Y} is sent to every cell whose X/Y coordinates equal h_X(u(X)), h_Y(u(Y)); a result
+tuple is assembled at exactly one cell (the one matching all its hashed coordinates).
+
+Used three ways:
+  * skew-free subqueries Q''_light(η) inside Theorem 6.2 (share λ per attribute);
+  * the standalone one-round baseline of [13]/[6] with LP-optimal uniform shares
+    (``benchmarks/bench_oneround_baseline.py``) — correct on any input, load degrades
+    under skew, which is precisely the paper's motivation;
+  * the JAX data plane mirrors this routing with all_to_all (repro.dataplane).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+from scipy.optimize import linprog
+
+from ..core.hypergraph import Hypergraph
+from ..core.query import Attr, JoinQuery, Relation, reference_join
+from .simulator import MPCSimulator
+
+
+def uniform_lp_shares(g: Hypergraph, p: int) -> Dict[Attr, int]:
+    """One-round share optimizer for *uniform* data: choose exponents y_X ≥ 0 with
+    Σ y_X ≤ 1 maximizing min_e Σ_{X∈e} y_X; share_X = round(p^{y_X}).
+    (For a clique/cycle this recovers the classic p^{2/|V|}-style shares.)"""
+    attrs = list(g.vertices)
+    na = len(attrs)
+    aidx = {a: i for i, a in enumerate(attrs)}
+    # vars: y_0..y_{na-1}, t ; maximize t  s.t. t - Σ_{X∈e} y_X ≤ 0 ; Σ y ≤ 1 ; y ≥ 0
+    nvar = na + 1
+    c = np.zeros(nvar)
+    c[-1] = -1.0
+    a_ub = []
+    b_ub = []
+    for e in g.edges:
+        row = np.zeros(nvar)
+        row[-1] = 1.0
+        for v in e:
+            row[aidx[v]] = -1.0
+        a_ub.append(row)
+        b_ub.append(0.0)
+    row = np.zeros(nvar)
+    row[:na] = 1.0
+    a_ub.append(row)
+    b_ub.append(1.0)
+    res = linprog(c, A_ub=np.array(a_ub), b_ub=np.array(b_ub), bounds=(0, None), method="highs")
+    if not res.success:
+        raise RuntimeError(res.message)
+    shares = {}
+    for a in attrs:
+        shares[a] = max(1, int(round(p ** float(res.x[aidx[a]]))))
+    # keep the grid within p cells
+    while math.prod(shares.values()) > p:
+        amax = max(shares, key=lambda a: shares[a])
+        shares[amax] = max(1, shares[amax] - 1)
+    return shares
+
+
+class HyperCubeGrid:
+    """Mixed-radix cell indexing over an ordered attribute list."""
+
+    def __init__(self, attrs: Sequence[Attr], shares: Dict[Attr, int]):
+        self.attrs = tuple(attrs)
+        self.dims = tuple(int(shares[a]) for a in self.attrs)
+        self.size = math.prod(self.dims) if self.dims else 1
+
+    def cells_for(self, fixed: Dict[Attr, np.ndarray]) -> np.ndarray:
+        """Vectorized: given per-attribute fixed coordinates (arrays of equal length n)
+        for a subset of attrs, return (n, n_free_combos) flat cell ids covering all
+        combinations of the free dims."""
+        n = len(next(iter(fixed.values()))) if fixed else 1
+        free_dims = [d for a, d in zip(self.attrs, self.dims) if a not in fixed]
+        n_free = math.prod(free_dims) if free_dims else 1
+        # enumerate free combos
+        combos = np.zeros((n_free, len(self.attrs)), dtype=np.int64)
+        if free_dims:
+            grid = np.indices(free_dims).reshape(len(free_dims), -1).T
+            j = 0
+            for ai, a in enumerate(self.attrs):
+                if a not in fixed:
+                    combos[:, ai] = grid[:, j]
+                    j += 1
+        flat = np.zeros((n, n_free), dtype=np.int64)
+        for ai, a in enumerate(self.attrs):
+            stride = math.prod(self.dims[ai + 1 :]) if ai + 1 < len(self.dims) else 1
+            if a in fixed:
+                flat += (fixed[a].reshape(-1, 1)) * stride
+            else:
+                flat += combos[:, ai].reshape(1, -1) * stride
+        return flat
+
+
+def route_hypercube(
+    sim: MPCSimulator,
+    grid: HyperCubeGrid,
+    fragments: Iterable[Tuple[Tuple[Attr, ...], object, np.ndarray]],
+    salt,
+    deliver: Callable[[int, object, np.ndarray], None],
+) -> None:
+    """Route rows to HyperCube cells. ``fragments`` yields (scheme, out_tag, rows);
+    ``deliver(cell, out_tag, rows)`` performs the sends (caller controls the physical
+    mapping, enabling the Lemma 3.2 matrix composition). Must be called inside a round."""
+    for scheme, out_tag, rows in fragments:
+        if rows.shape[0] == 0:
+            continue
+        fixed = {}
+        for col, attr in enumerate(scheme):
+            if attr in grid.attrs:
+                share = grid.dims[grid.attrs.index(attr)]
+                fixed[attr] = sim.hashes.hash((salt, attr), rows[:, col], share)
+        cells = grid.cells_for(fixed)  # (n, n_free)
+        for combo in range(cells.shape[1]):
+            flat = cells[:, combo]
+            order = np.argsort(flat, kind="stable")
+            flat_sorted = flat[order]
+            rows_sorted = rows[order]
+            bounds = np.searchsorted(flat_sorted, np.unique(flat_sorted))
+            uniq = np.unique(flat_sorted)
+            bounds = np.append(bounds, flat.shape[0])
+            for i, cell in enumerate(uniq.tolist()):
+                deliver(int(cell), out_tag, rows_sorted[bounds[i] : bounds[i + 1]])
+
+
+def skewfree_hypercube_join(
+    query: JoinQuery,
+    shares: Dict[Attr, int],
+    p: int,
+    seed: int = 0,
+    materialize: bool = True,
+) -> Tuple[MPCSimulator, int, Optional[Relation]]:
+    """Standalone one-round HyperCube join (Lemma 3.3 / the one-round baseline).
+
+    Returns (sim with metered loads, result_count, result or None). Input placement is
+    even; the single communication round routes every tuple to its hash cells; each cell
+    joins its fragments locally. Correct on any input; optimal only when skew-free.
+    """
+    sim = MPCSimulator(p, seed=seed)
+    from .simulator import scatter_input
+
+    for rel in query.relations:
+        scatter_input(sim, ("in", rel.edge), rel.data, seed=seed + 1)
+
+    attrs = query.attset
+    grid = HyperCubeGrid(attrs, shares)
+    assert grid.size <= p, (grid.size, p)
+
+    sim.begin_round("hypercube")
+    for mid in range(sim.p):
+        frags = []
+        for rel in query.relations:
+            local = sim.local(mid, ("in", rel.edge))
+            frags.append((rel.scheme, ("hc", rel.edge), local))
+        route_hypercube(
+            sim,
+            grid,
+            frags,
+            salt="hc",
+            deliver=lambda cell, tag, rows: sim.send(cell, tag, rows),
+        )
+    sim.end_round()
+
+    total = 0
+    out_rows = []
+    for cell in range(grid.size):
+        rels = []
+        empty = False
+        for rel in query.relations:
+            rows = sim.local(cell, ("hc", rel.edge))
+            if rows.shape[0] == 0:
+                empty = True
+                break
+            rels.append(Relation.make(rel.scheme, rows))
+        if empty:
+            continue
+        local_join = reference_join(JoinQuery.make(rels))
+        total += len(local_join)
+        if materialize and len(local_join):
+            out_rows.append(local_join.data)
+    result = None
+    if materialize:
+        data = (
+            np.concatenate(out_rows, axis=0)
+            if out_rows
+            else np.zeros((0, len(attrs)), dtype=np.int64)
+        )
+        result = Relation.make(attrs, data)
+    return sim, total, result

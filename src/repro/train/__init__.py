@@ -1,0 +1,3 @@
+"""Training substrate: AdamW (built here — no optax in the container), ZeRO-1 via
+sharding specs, gradient compression with error feedback, deterministic resumable data
+pipeline, checkpoint/restart, straggler monitoring."""

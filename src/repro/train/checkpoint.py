@@ -1,0 +1,137 @@
+"""Checkpoint/restart with elastic resharding.
+
+Format: one .npz per checkpoint step (leaves keyed by tree key-path) + a manifest
+JSON (step, arch, mesh geometry, wall time). Writes are atomic (tmp + rename) and a
+``latest`` marker is updated last, so a crash mid-write can never corrupt the resume
+point — the launcher's auto-resume picks the newest complete step.
+
+Elastic: leaves are saved as *global* (unsharded) arrays; restore re-places them under
+whatever mesh/shardings the new run uses (the geometry can change between runs —
+device_put reshards). An async writer thread overlaps serialization with training.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":  # npz can't store ml_dtypes: upcast lossless
+            arr = arr.astype(np.float32)
+        flat[jax.tree_util.keystr(path)] = arr
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    leaves = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = jax.tree_util.keystr(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save -----------------------------------------------------------------
+
+    def _paths(self, step: int) -> Tuple[Path, Path]:
+        return self.dir / f"ckpt_{step:08d}.npz", self.dir / f"ckpt_{step:08d}.json"
+
+    def save(self, step: int, state: Dict[str, Any], meta: Optional[dict] = None) -> None:
+        npz, man = self._paths(step)
+        flat = _flatten(state)
+        tmp = npz.with_suffix(".npz.tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        tmp.rename(npz)
+        manifest = {"step": step, "time": time.time(), **(meta or {})}
+        tmp2 = man.with_suffix(".json.tmp")
+        tmp2.write_text(json.dumps(manifest, indent=2))
+        tmp2.rename(man)
+        (self.dir / "latest.tmp").write_text(str(step))
+        (self.dir / "latest.tmp").rename(self.dir / "latest")
+        self._gc()
+
+    def save_async(self, step: int, state: Dict[str, Any], meta: Optional[dict] = None) -> None:
+        """Snapshot to host memory synchronously (cheap), write on a thread."""
+        self.wait()
+        flat = _flatten(state)  # device_get happens here, before training resumes
+
+        def _write():
+            npz, man = self._paths(step)
+            tmp = npz.with_suffix(".npz.tmp")
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+            tmp.rename(npz)
+            manifest = {"step": step, "time": time.time(), **(meta or {})}
+            tmp2 = man.with_suffix(".json.tmp")
+            tmp2.write_text(json.dumps(manifest, indent=2))
+            tmp2.rename(man)
+            (self.dir / "latest.tmp").write_text(str(step))
+            (self.dir / "latest.tmp").rename(self.dir / "latest")
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            npz, man = self._paths(s)
+            npz.unlink(missing_ok=True)
+            man.unlink(missing_ok=True)
+
+    # -- restore ----------------------------------------------------------------
+
+    def all_steps(self):
+        return [
+            int(p.stem.split("_")[1]) for p in self.dir.glob("ckpt_*.npz")
+        ]
+
+    def latest_step(self) -> Optional[int]:
+        marker = self.dir / "latest"
+        if marker.exists():
+            s = int(marker.read_text().strip())
+            if self._paths(s)[0].exists():
+                return s
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, step: int, template, shardings=None):
+        """Rebuild `template`-shaped state; device_put under `shardings` (elastic)."""
+        npz, man = self._paths(step)
+        with np.load(npz) as data:
+            flat = {k: data[k] for k in data.files}
+        state = _unflatten(template, flat)
+        if shardings is not None:
+            state = jax.tree.map(lambda a, s: jax.device_put(a, s), state, shardings)
+        else:
+            state = jax.tree.map(jax.device_put, state)
+        meta = json.loads(man.read_text()) if man.exists() else {"step": step}
+        return state, meta

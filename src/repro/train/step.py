@@ -1,0 +1,112 @@
+"""train_step / serve_step / prefill_step builders — the functions the launcher jits.
+
+train_step supports microbatch gradient accumulation (lax.scan over microbatches) and
+optional int8 gradient compression with error feedback. Under a mesh, the DP gradient
+mean is implicit in GSPMD (batch sharded over dp ⇒ the loss mean inserts the
+all-reduce); compression runs on the accumulated local gradient before the optimizer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import decode_step, loss_fn, prefill
+from .optimizer import (
+    AdamWConfig,
+    adamw_update,
+    compressed_grads_with_ef,
+    init_ef_state,
+)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    compress_grads: bool = False
+
+
+def make_train_step(cfg, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state, metrics).
+
+    opt_state = {"adamw": …, "ef": … (if compression)}.
+    batch leaves have leading dim = global_batch (microbatches folded internally).
+    """
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = tcfg.microbatches
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_batch):
+                acc = carry
+                g, metrics = compute_grads(params, mb_batch)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, metrics_all = jax.lax.scan(acc_body, zero, micro)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+        else:
+            grads, metrics = compute_grads(params, batch)
+
+        if tcfg.compress_grads:
+            grads, new_ef = compressed_grads_with_ef(grads, opt_state["ef"])
+        else:
+            new_ef = opt_state.get("ef")
+
+        new_params, new_adamw, opt_metrics = adamw_update(
+            tcfg.adamw, params, grads, opt_state["adamw"]
+        )
+        new_opt = {"adamw": new_adamw}
+        if new_ef is not None:
+            new_opt["ef"] = new_ef
+        metrics = {**metrics, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(cfg, tcfg: TrainConfig, params):
+    from .optimizer import init_opt_state
+
+    state = {"adamw": init_opt_state(params)}
+    if tcfg.compress_grads:
+        state["ef"] = init_ef_state(params)
+    return state
+
+
+def make_serve_step(cfg):
+    """serve_step(params, cache, tokens_last) → (next_tokens, logits, cache)."""
+
+    def serve_step(params, cache, tokens_last):
+        logits, cache = decode_step(cfg, params, cache, tokens_last)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch)
+
+    return prefill_step

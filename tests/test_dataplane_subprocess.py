@@ -1,0 +1,23 @@
+"""Multi-device tests run in a subprocess so the 8-device XLA flag never leaks into
+this process (smoke tests must see 1 device — dry-run contract)."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPT = Path(__file__).parent / "subproc" / "dataplane_check.py"
+
+
+@pytest.mark.slow
+def test_dataplane_multi_device():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, str(SCRIPT)],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-3000:]}"
+    assert "ALL DATAPLANE CHECKS PASSED" in res.stdout

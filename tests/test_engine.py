@@ -1,0 +1,122 @@
+"""Theorem 6.2 engine vs the oracle: exactness, exactly-once, load sanity."""
+
+import numpy as np
+import pytest
+
+from repro.core.query import JoinQuery, Relation, random_query, reference_join
+from repro.core.taxonomy import compute_stats
+from repro.mpc.engine import mpc_join
+from repro.mpc.statistics import distributed_stats
+from repro.mpc.simulator import MPCSimulator, scatter_input
+
+
+def _check(query, p, seed=0, lam=None):
+    oracle = reference_join(query)
+    res = mpc_join(query, p=p, seed=seed, lam=lam, materialize=True)
+    assert res.count == len(oracle), (res.count, len(oracle), res.per_h_counts)
+    got = set(map(tuple, res.rows.tolist()))
+    want = oracle.rows_as_set()
+    assert got == want
+    # exactly-once: materialized rows (pre-dedup) match the count
+    assert res.rows.shape[0] == res.count
+    return res
+
+
+def test_two_relation_join_uniform():
+    rng = np.random.default_rng(0)
+    q = random_query(rng, "line", 3, tuples_per_rel=200, dom_size=40)
+    _check(q, p=8)
+
+
+def test_triangle_uniform():
+    rng = np.random.default_rng(1)
+    q = random_query(rng, "clique", 3, tuples_per_rel=150, dom_size=25)
+    _check(q, p=8)
+
+
+def test_triangle_skewed():
+    """Zipf-skewed columns produce real heavy values — exercises every step."""
+    rng = np.random.default_rng(2)
+    q = random_query(rng, "clique", 3, tuples_per_rel=300, dom_size=30, skew=2.0)
+    res = _check(q, p=8, lam=16)  # λ=16 → threshold m/λ ≈ 57: the Zipf head is heavy
+    # heavy taxonomy must actually trigger: some H != empty contributes
+    assert any(len(h) > 0 and c > 0 for h, c in res.per_h_counts.items())
+
+
+def test_cycle4_skewed():
+    rng = np.random.default_rng(3)
+    q = random_query(rng, "cycle", 4, tuples_per_rel=200, dom_size=20, skew=1.0)
+    _check(q, p=16, lam=3)
+
+
+def test_star_skewed():
+    """Star joins: hub attribute heavy — isolated attributes appear after removing it
+    (the isolated-CP machinery is exercised)."""
+    rng = np.random.default_rng(4)
+    q = random_query(rng, "star", 4, tuples_per_rel=150, dom_size=12, skew=1.5)
+    _check(q, p=8, lam=3)
+
+
+def test_line5():
+    rng = np.random.default_rng(5)
+    q = random_query(rng, "line", 5, tuples_per_rel=120, dom_size=15, skew=0.8)
+    _check(q, p=8, lam=3)
+
+
+def test_single_heavy_value_cross_product():
+    """Adversarial: one super-heavy hub value; join is near a cartesian product of the
+    leaf lists — classic case where one-round algorithms blow up."""
+    n = 120
+    hub = np.zeros(n, dtype=np.int64)  # every tuple shares hub value 0
+    a = np.arange(n, dtype=np.int64)
+    b = np.arange(n, dtype=np.int64) + 1000
+    q = JoinQuery.make(
+        [
+            Relation.make(("H", "A"), np.stack([hub, a], axis=1)),
+            Relation.make(("H", "B"), np.stack([hub, b], axis=1)),
+        ]
+    )
+    res = _check(q, p=8, lam=4)
+    assert res.count == n * n
+
+
+def test_empty_result():
+    q = JoinQuery.make(
+        [
+            Relation.make(("A", "B"), np.array([[1, 2], [3, 4]])),
+            Relation.make(("B", "C"), np.array([[9, 9]])),
+        ]
+    )
+    res = mpc_join(q, p=4, materialize=True)
+    assert res.count == 0
+    assert res.rows.shape[0] == 0
+
+
+def test_distributed_stats_match_oracle():
+    """The 3-round histogram protocol computes exactly the centralized statistics."""
+    rng = np.random.default_rng(7)
+    q = random_query(rng, "clique", 3, tuples_per_rel=250, dom_size=20, skew=1.3)
+    lam = 5
+    sim = MPCSimulator(8, seed=0)
+    for rel in q.relations:
+        scatter_input(sim, ("in", rel.edge), rel.data, seed=17)
+    got = distributed_stats(sim, q, lam)
+    want = compute_stats(q, lam)
+    assert got.m == want.m
+    assert set(got.heavy) == set(want.heavy)
+    for a in want.heavy:
+        assert np.array_equal(got.heavy[a], want.heavy[a])
+    assert got.cond == want.cond
+    assert got.pair == want.pair
+    assert got.light_cnt == want.light_cnt
+
+
+def test_load_reported():
+    rng = np.random.default_rng(8)
+    q = random_query(rng, "clique", 3, tuples_per_rel=400, dom_size=25, skew=1.0)
+    res = mpc_join(q, p=8, materialize=False)
+    assert res.load > 0
+    names = [n for n, _ in res.sim.load_report()]
+    assert "step1" in names and "step3-route" in names
+    # count-only mode must agree with the oracle too
+    assert res.count == len(reference_join(q))

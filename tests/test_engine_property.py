@@ -1,0 +1,110 @@
+"""Property-based validation (hypothesis): the MPC engine is exact and exactly-once on
+random queries/data; the isolated cartesian product theorem holds empirically; the
+heavy/light taxonomy (4.2) is a *disjoint* partition of the join result."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.icp import all_icp_checks
+from repro.core.query import JoinQuery, Relation, pattern_edges, reference_join
+from repro.core.taxonomy import compute_stats, configurations, plan_for_h
+from repro.core.semijoin import join_reduced, semijoin_reduce
+from repro.mpc.engine import mpc_join
+
+KINDS = ["line", "cycle", "clique", "star"]
+
+
+def _build_query(rng: np.random.Generator, kind: str, n_attrs: int, n_tuples: int, dom: int, skew: float):
+    edges = pattern_edges(kind, n_attrs)
+    rels = []
+    for e in edges:
+        cols = []
+        for _ in range(2):
+            if skew > 0:
+                ranks = np.arange(1, dom + 1, dtype=np.float64) ** (-skew)
+                ranks /= ranks.sum()
+                cols.append(rng.choice(dom, size=n_tuples, p=ranks))
+            else:
+                cols.append(rng.integers(0, dom, size=n_tuples))
+        rels.append(Relation.make(e, np.stack(cols, axis=1)))
+    return JoinQuery.make(rels)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    kind=st.sampled_from(KINDS),
+    n_attrs=st.integers(3, 4),
+    n_tuples=st.integers(20, 120),
+    dom=st.integers(3, 25),
+    skew=st.sampled_from([0.0, 1.0, 2.5]),
+    p=st.sampled_from([4, 8]),
+    lam=st.sampled_from([2, 4, 8]),
+)
+def test_engine_matches_oracle(seed, kind, n_attrs, n_tuples, dom, skew, p, lam):
+    rng = np.random.default_rng(seed)
+    q = _build_query(rng, kind, n_attrs, n_tuples, dom, skew)
+    oracle = reference_join(q)
+    res = mpc_join(q, p=p, lam=lam, materialize=True, seed=seed % 7)
+    assert res.count == len(oracle)
+    assert res.rows.shape[0] == res.count          # exactly-once, no dedup needed
+    assert set(map(tuple, res.rows.tolist())) == oracle.rows_as_set()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    kind=st.sampled_from(KINDS),
+    n_attrs=st.integers(3, 4),
+    dom=st.integers(3, 12),
+    lam=st.sampled_from([2, 4]),
+)
+def test_taxonomy_is_disjoint_partition(seed, kind, n_attrs, dom, lam):
+    """(4.2): Join(Q) = ⊎_H ⊎_η Join(Q'(η)) × {η} — disjoint because each result tuple
+    determines its own H (the set of attributes where it takes heavy values)."""
+    rng = np.random.default_rng(seed)
+    q = _build_query(rng, kind, n_attrs, 60, dom, skew=2.0)
+    stats = compute_stats(q, lam)
+    oracle = reference_join(q)
+    attrs = q.attset
+
+    total = 0
+    import itertools
+
+    for r in range(len(attrs) + 1):
+        for h in itertools.combinations(attrs, r):
+            plan = plan_for_h(q, h)
+            for eta in configurations(stats, plan.h_set):
+                if len(h) == len(attrs):
+                    ok = all(
+                        stats.pair.get(
+                            (rel.edge, eta.value(rel.scheme[0]), eta.value(rel.scheme[1])), 0
+                        )
+                        > 0
+                        for rel in q.relations
+                    )
+                    total += 1 if ok else 0
+                    continue
+                reduced = semijoin_reduce(q, stats, plan, eta)
+                if reduced is None:
+                    continue
+                total += join_reduced(reduced, plan).shape[0]
+    assert total == len(oracle)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    kind=st.sampled_from(["star", "cycle", "clique"]),
+    n_attrs=st.integers(3, 4),
+    lam=st.sampled_from([2, 3, 4]),
+)
+def test_isolated_cartesian_product_theorem(seed, kind, n_attrs, lam):
+    """Theorem 5.4 (and the weaker Lemma 5.5): Σ_η |Join(Q''_J(η))| ≤ bound, for every
+    H and every non-empty J ⊆ I."""
+    rng = np.random.default_rng(seed)
+    q = _build_query(rng, kind, n_attrs, 50, dom=6, skew=2.0)
+    stats = compute_stats(q, lam)
+    for chk in all_icp_checks(q, stats):
+        assert chk.lhs <= chk.rhs_thm54 + 1e-9, (chk.h_set, chk.j_set, chk.lhs, chk.rhs_thm54)
+        assert chk.lhs <= chk.rhs_lem55 + 1e-9

@@ -1,0 +1,100 @@
+"""Sec. 2 machinery: fractional covers/packings, Lemma 2.1, ψ vs ρ."""
+
+from fractions import Fraction
+
+import pytest
+
+from repro.core.hypergraph import (
+    Hypergraph,
+    fractional_edge_cover,
+    fractional_edge_packing,
+    quasi_packing_number,
+    zero_one_packing,
+)
+from repro.core.query import pattern_edges
+
+
+def _graph(kind, n):
+    return Hypergraph.from_edges(pattern_edges(kind, n))
+
+
+def test_triangle_rho_tau():
+    g = _graph("clique", 3)
+    rho_v, w = fractional_edge_cover(g)
+    tau_v, _ = fractional_edge_packing(g)
+    assert rho_v == Fraction(3, 2)
+    assert tau_v == Fraction(3, 2)
+    # all-half cover
+    assert all(x == Fraction(1, 2) for x in w.values())
+
+
+@pytest.mark.parametrize(
+    "kind,n,expect_rho",
+    [
+        ("clique", 4, Fraction(2)),
+        ("clique", 5, Fraction(5, 2)),
+        ("cycle", 4, Fraction(2)),
+        ("cycle", 5, Fraction(5, 2)),
+        ("cycle", 6, Fraction(3)),
+        ("line", 4, Fraction(2)),     # path X0-X1-X2-X3: edges {01},{12},{23} -> 2
+        ("star", 5, Fraction(4)),     # hub + 4 leaves: every leaf edge weight 1
+    ],
+)
+def test_rho_known_values(kind, n, expect_rho):
+    rho_v, w = fractional_edge_cover(_graph(kind, n))
+    assert rho_v == expect_rho
+    # verify cover validity
+    g = _graph(kind, n)
+    for v in g.vertices:
+        assert sum(w[e] for e in g.edges if v in e) >= 1
+
+
+def test_lemma_2_1_identity():
+    """ρ + τ = |V| and ρ ≥ τ for binary graphs."""
+    for kind, n in [("clique", 3), ("clique", 4), ("cycle", 5), ("line", 5), ("star", 4)]:
+        g = _graph(kind, n)
+        rho_v, _ = fractional_edge_cover(g)
+        tau_v, _ = fractional_edge_packing(g)
+        assert rho_v + tau_v == len(g.vertices)
+        assert rho_v >= tau_v
+
+
+def test_zero_one_packing_properties():
+    """Lemma 2.1 bullet 2: vertex weights all 0/1, ρ - τ = |Z|."""
+    for kind, n in [("clique", 3), ("cycle", 5), ("line", 4), ("star", 5), ("cycle", 6)]:
+        g = _graph(kind, n)
+        tau_v, w, z = zero_one_packing(g)
+        rho_v, _ = fractional_edge_cover(g)
+        weights = {v: sum(w[e] for e in g.edges if v in e) for v in g.vertices}
+        assert all(x in (0, 1) for x in weights.values())
+        assert rho_v - tau_v == len(z)
+        assert sum(w.values()) == tau_v
+
+
+def test_quasi_packing_clique_cycle():
+    """[13]: clique ψ = |V|-1; cycle ψ = ceil(2(|V|-1)/3)."""
+    g = _graph("clique", 4)
+    assert quasi_packing_number(g) == Fraction(3)
+    g = _graph("cycle", 5)
+    assert quasi_packing_number(g) == Fraction(3)  # ceil(8/3) = 3
+    g = _graph("cycle", 6)
+    assert quasi_packing_number(g) == Fraction(4)  # ceil(10/3) = 4
+
+
+def test_paper_figure1_example():
+    """The Fig. 1a query (12 attributes; the 11 edges named in the text): the paper's
+    W1/W2 certify ρ = 6.5, τ = 5.5 — both remain optimal on this reconstruction."""
+    edges = [
+        ("A", "B"), ("A", "C"), ("B", "C"),            # the triangle
+        ("A", "D"), ("A", "E"),                        # cross edges named in Sec. 4/5.2
+        ("D", "G"), ("D", "K"), ("E", "H"), ("E", "L"), ("F", "G"),
+        ("I", "J"),
+    ]
+    g = Hypergraph.from_edges(edges)
+    rho_v, _ = fractional_edge_cover(g)
+    tau_v, _ = fractional_edge_packing(g)
+    assert rho_v + tau_v == 12
+    assert rho_v == Fraction(13, 2)
+    assert tau_v == Fraction(11, 2)
+    _, _, z = zero_one_packing(g)
+    assert len(z) == 1  # paper: Z = {L} (any single exposed vertex is acceptable)

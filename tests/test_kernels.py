@@ -1,0 +1,145 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the kernel body + BlockSpec schedule on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import fold64, hash_partition, merge_join_counts, ssd_chunk
+from repro.kernels import ref as kref
+from repro.models.mamba import ssd_reference
+
+
+# ---------------------------------------------------------------------------
+# merge_join
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", [(256, 1024), (512, 2048), (300, 1500), (256, 999)])
+@pytest.mark.parametrize("dom", [50, 10_000])
+def test_merge_join_counts_matches_searchsorted(n, m, dom):
+    rng = np.random.default_rng(n + m + dom)
+    a = np.sort(rng.integers(0, dom, n).astype(np.int32))
+    b = np.sort(rng.integers(0, dom, m).astype(np.int32))
+    lo, up = merge_join_counts(jnp.asarray(a), jnp.asarray(b))
+    lo_ref, up_ref = kref.merge_join_counts_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(lo_ref))
+    np.testing.assert_array_equal(np.asarray(up), np.asarray(up_ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 1_000),
+    n=st.integers(1, 700),
+    m=st.integers(1, 3000),
+    dom=st.integers(1, 500),
+)
+def test_merge_join_property(seed, n, m, dom):
+    rng = np.random.default_rng(seed)
+    a = np.sort(rng.integers(0, dom, n).astype(np.int32))
+    b = np.sort(rng.integers(0, dom, m).astype(np.int32))
+    lo, up = merge_join_counts(jnp.asarray(a), jnp.asarray(b))
+    lo, up = np.asarray(lo), np.asarray(up)
+    # counts == true multiplicity
+    want = np.array([np.sum(b == x) for x in a])
+    np.testing.assert_array_equal(up - lo, want)
+    # ranges actually index matches
+    for i in range(0, n, max(1, n // 10)):
+        assert np.all(b[lo[i] : up[i]] == a[i])
+
+
+def test_merge_join_total_pairs_vs_join():
+    """Σ counts == |A ⋈ B| on the shared key."""
+    rng = np.random.default_rng(7)
+    a = np.sort(rng.integers(0, 40, 512).astype(np.int32))
+    b = np.sort(rng.integers(0, 40, 2048).astype(np.int32))
+    lo, up = merge_join_counts(jnp.asarray(a), jnp.asarray(b))
+    total = int(np.sum(np.asarray(up) - np.asarray(lo)))
+    brute = sum(int(np.sum(b == x)) for x in a)
+    assert total == brute
+
+
+# ---------------------------------------------------------------------------
+# hash_partition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1024, 4096, 1000])
+@pytest.mark.parametrize("parts", [8, 64, 256])
+def test_hash_partition_matches_ref(n, parts):
+    rng = np.random.default_rng(n * parts)
+    keys = rng.integers(-(2**62), 2**62, n).astype(np.int64)
+    part, hist = hash_partition(jnp.asarray(keys), parts)
+    part_ref, hist_ref = kref.hash_partition_ref(fold64(jnp.asarray(keys)), parts, tile=1)
+    np.testing.assert_array_equal(np.asarray(part), np.asarray(part_ref).reshape(-1))
+    np.testing.assert_array_equal(
+        np.asarray(hist), np.bincount(np.asarray(part), minlength=parts)
+    )
+    assert int(np.asarray(hist).sum()) == n
+
+
+def test_hash_partition_balanced():
+    """2-universal-ish mix: no partition should be grossly overloaded on uniform keys."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**62, 1 << 14).astype(np.int64)
+    _, hist = hash_partition(jnp.asarray(keys), 16)
+    h = np.asarray(hist)
+    assert h.max() < 2.0 * h.mean()
+
+
+# ---------------------------------------------------------------------------
+# ssd
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,s,p,n,chunk", [
+    (2, 64, 16, 32, 16),
+    (3, 128, 32, 64, 32),
+    (1, 64, 64, 128, 64),
+])
+def test_ssd_kernel_matches_recurrence(bh, s, p, n, chunk):
+    rng = np.random.default_rng(bh * s + p)
+    x = rng.normal(size=(bh, s, p)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, size=(bh, s)).astype(np.float32)
+    a = -rng.uniform(0.5, 2.0, size=(bh,)).astype(np.float32)
+    b = rng.normal(size=(bh, s, n)).astype(np.float32)
+    c = rng.normal(size=(bh, s, n)).astype(np.float32)
+
+    y_k, st_k = ssd_chunk(*map(jnp.asarray, (x, dt, a, b, c)), chunk=chunk)
+
+    # oracle: naive per-token recurrence (ssd_reference vectorizes `a` per head, not
+    # per batch — run one (batch·head) slice at a time with H=1, groups=1)
+    for i in range(bh):
+        y_i, st_i = ssd_reference(
+            jnp.asarray(x[i : i + 1, :, None, :]),
+            jnp.asarray(dt[i : i + 1, :, None]),
+            jnp.asarray(a[i : i + 1]),
+            jnp.asarray(b[i : i + 1, :, None, :]),
+            jnp.asarray(c[i : i + 1, :, None, :]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(y_k[i]), np.asarray(y_i[0, :, 0, :]), rtol=2e-4, atol=2e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(st_k[i]), np.asarray(st_i[0, 0]), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_ssd_kernel_matches_ops_oracle():
+    """Pallas path ≡ the jnp chunked oracle in ops.py (same chunking)."""
+    rng = np.random.default_rng(3)
+    bh, s, p, n, chunk = 2, 128, 16, 32, 32
+    args = (
+        rng.normal(size=(bh, s, p)).astype(np.float32),
+        rng.uniform(0.01, 0.2, size=(bh, s)).astype(np.float32),
+        -rng.uniform(0.5, 2.0, size=(bh,)).astype(np.float32),
+        rng.normal(size=(bh, s, n)).astype(np.float32),
+        rng.normal(size=(bh, s, n)).astype(np.float32),
+    )
+    jargs = tuple(map(jnp.asarray, args))
+    y1, s1 = ssd_chunk(*jargs, chunk=chunk, use_pallas=True)
+    y2, s2 = ssd_chunk(*jargs, chunk=chunk, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,97 @@
+"""Roofline machinery: HLO collective parser, term math, mesh builders, spec rules."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.roofline import HW, collective_bytes, roofline_terms
+from repro.configs import ARCHS, SHAPES, shape_applicable
+
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,4096,512] parameter(0)
+  %ag = bf16[16,4096,8192]{2,1,0} all-gather(%p0), dimensions={2}
+  %ar = f32[1024,1024] all-reduce(%x), to_apply=%add
+  ROOT %t = (f32[2,2]) tuple(%y)
+  %rs.1 = bf16[8,128]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = (bf16[4,64]{1,0}, bf16[4,64]{1,0}) all-to-all(%a, %b)
+  %cp = u32[16] collective-permute(%c), source_target_pairs={{0,1}}
+  %ags = bf16[32,32] all-gather-start(%w)
+  %agd = bf16[32,32] all-gather-done(%ags)
+}
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO)
+    assert out["all-gather_bytes"] == 16 * 4096 * 8192 * 2 + 32 * 32 * 2
+    assert out["all-reduce_bytes"] == 1024 * 1024 * 4
+    assert out["reduce-scatter_bytes"] == 8 * 128 * 2
+    assert out["all-to-all_bytes"] == 2 * 4 * 64 * 2
+    assert out["collective-permute_bytes"] == 16 * 4
+    assert out["all-gather_count"] == 2  # -start counted once, -done skipped
+    assert out["total_bytes"] == sum(
+        out[f"{k}_bytes"]
+        for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+    )
+
+
+def test_roofline_terms():
+    t = roofline_terms(197e12, 819e9, 100e9)   # exactly 1 s compute & memory, 2 s coll
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["t_memory_s"] == pytest.approx(1.0)
+    assert t["t_collective_s"] == pytest.approx(2.0)
+    assert t["bottleneck"] == "collective"
+
+
+def test_shape_applicability_matrix():
+    """40 cells: 34 applicable + 6 documented long_500k skips."""
+    total = ok = 0
+    skipped = []
+    for arch, cfg in ARCHS.items():
+        for name, shape in SHAPES.items():
+            total += 1
+            a, why = shape_applicable(cfg, shape)
+            if a:
+                ok += 1
+            else:
+                skipped.append((arch, name))
+    assert total == 40 and ok == 34
+    assert all(s == "long_500k" for _, s in skipped)
+    assert {a for a, _ in skipped} == {
+        "internvl2-26b", "whisper-small", "mistral-large-123b",
+        "internlm2-20b", "deepseek-v2-lite-16b", "deepseek-moe-16b",
+    }
+
+
+def test_mesh_builders_shapes():
+    from repro.launch.mesh import axes_for, make_production_mesh
+
+    # on 1 device we can't build the real mesh; validate geometry logic instead
+    assert make_production_mesh.__defaults__ == (False,) or True
+    import repro.launch.mesh as m
+
+    # axes_for on an abstract stand-in
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+
+    ax = axes_for(FakeMesh(), sequence_parallel=True)
+    assert ax.data == ("pod", "data") and ax.model == "model" and ax.sequence_parallel
+
+
+def test_param_spec_rules_divisibility():
+    """Non-divisible dims fall back to replication (whisper's 12-head case)."""
+    from repro.distributed.specs import _fit
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    spec = _fit(FakeMesh(), (12, 64), ("model", None), stack_dims=0)
+    assert spec == P(None, None)          # 12 % 16 != 0 → replicated
+    spec = _fit(FakeMesh(), (768, 3072), ("data", "model"), stack_dims=0)
+    assert spec == P("data", "model")
+    spec = _fit(FakeMesh(), (4, 768, 3072), ("data", "model"), stack_dims=1)
+    assert spec == P(None, "data", "model")
