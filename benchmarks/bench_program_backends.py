@@ -1,0 +1,89 @@
+"""One compiled program, two backends: simulator-metered load vs dataplane wall-clock.
+
+The round-program IR makes the comparison apples-to-apples: `compile_plan`
+fixes the stages and routes once; the SimulatorExecutor reports the exact MPC
+load (the paper's cost metric), the DataplaneExecutor executes the same stages
+as shard_map collectives and reports wall-clock.
+
+Run standalone with 8 fake host devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \\
+        PYTHONPATH=src python -m benchmarks.run --only program_backends
+
+(inside the harness the device count is whatever the process booted with;
+a 1-device mesh is valid, just not a communication benchmark)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.query import JoinQuery, Relation, hub_triangle_query, reference_join
+from repro.core.taxonomy import compute_stats
+from repro.mpc.executors import DataplaneExecutor, SimulatorExecutor
+from repro.mpc.program import compile_plan
+
+
+def binary_join(n_a: int, n_b: int, dom: int, seed: int = 0) -> JoinQuery:
+    rng = np.random.default_rng(seed)
+    a = np.unique(rng.integers(0, dom, size=(n_a, 2)), axis=0)
+    b = np.unique(rng.integers(0, dom, size=(n_b, 2)), axis=0)
+    return JoinQuery.make(
+        [Relation.make(("A", "B"), a), Relation.make(("B", "C"), b)]
+    )
+
+
+def run(report):
+    import jax
+
+    p_sim = 8
+    cases = [
+        ("binary", binary_join(1200, 1500, 60), 2),
+        ("triangle-hub", hub_triangle_query(n=300, hub_n=80, dom_size=40, hub=10_000), 16),
+    ]
+    for name, q, lam in cases:
+        stats = compute_stats(q, lam)
+        t0 = time.time()
+        program = compile_plan(q, stats, p_sim)
+        compile_us = (time.time() - t0) * 1e6
+        oracle_n = len(reference_join(q))
+        report(
+            f"program_backends/{name}/compile", compile_us,
+            f"stages={len(program.stages)} emits={len(program.emit)}",
+        )
+
+        t0 = time.time()
+        sim_res = SimulatorExecutor(p=p_sim).run(program, materialize=False)
+        sim_us = (time.time() - t0) * 1e6
+        assert sim_res.count == oracle_n, (sim_res.count, oracle_n)
+        report(
+            f"program_backends/{name}/simulator", sim_us,
+            f"p={p_sim} load={sim_res.sim.parallel_total_load} out={sim_res.count}",
+        )
+
+        n_dev = len(jax.devices())
+        ex = DataplaneExecutor()
+        try:
+            t0 = time.time()
+            dp_res = ex.run(program)           # first run pays jit compilation
+            cold_us = (time.time() - t0) * 1e6
+            assert dp_res.count == oracle_n, (dp_res.count, oracle_n)
+            t0 = time.time()
+            ex.run(program, materialize=False)
+            warm_us = (time.time() - t0) * 1e6
+            report(
+                f"program_backends/{name}/dataplane", warm_us,
+                f"devices={n_dev} cold_us={cold_us:.0f} out={dp_res.count} "
+                f"retries={dp_res.retries}",
+            )
+        except NotImplementedError as e:
+            report(f"program_backends/{name}/dataplane", 0.0, f"unsupported: {e}")
+
+
+if __name__ == "__main__":
+    import os
+
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    run(lambda name, us, derived="": print(f"{name},{us:.1f},{derived}"))

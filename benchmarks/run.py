@@ -25,6 +25,7 @@ def main() -> None:
         bench_lambda,
         bench_load_vs_p,
         bench_oneround_baseline,
+        bench_program_backends,
         bench_roofline,
     )
 
@@ -36,6 +37,7 @@ def main() -> None:
         ("hypercube", bench_hypercube),          # Lemma 3.3
         ("lambda", bench_lambda),                # λ-constant ablation (Sec. 6)
         ("kernels", bench_kernels),              # Pallas kernels
+        ("program_backends", bench_program_backends),  # IR: sim load vs device wall-clock
         ("roofline", bench_roofline),            # §Roofline table from dry-run
     ]
 

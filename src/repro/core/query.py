@@ -220,3 +220,31 @@ def random_query(
     edges = pattern_edges(kind, n_attrs)
     rels = [zipf_relation(rng, e, tuples_per_rel, dom_size, skew) for e in edges]
     return JoinQuery.make(rels)
+
+
+def hub_triangle_query(
+    n: int,
+    hub_n: int,
+    dom_size: int,
+    hub: int = 999,
+    seed: int = 1,
+) -> JoinQuery:
+    """Triangle with one planted heavy value (``hub``) on X0 only: ``hub_n``
+    tuples with distinct partners on each X0-edge (so dedup keeps them all)
+    plus ``n`` uniform tuples per relation.  With λ chosen so that
+    hub_n ≥ ⌈m/λ⌉ > per-value uniform counts, the taxonomy yields exactly the
+    H=∅ stage (a cyclic light join) and an H={X0} stage (cross-edge
+    semi-joins, no isolated attributes) — the canonical light-subquery
+    exercise shared by tests and benchmarks."""
+    rng = np.random.default_rng(seed)
+    planted = np.stack([np.full(hub_n, hub), np.arange(hub_n)], axis=1)
+    r01 = np.concatenate([planted, rng.integers(0, dom_size, (n, 2))])
+    r02 = np.concatenate([planted, rng.integers(0, dom_size, (n, 2))])
+    r12 = rng.integers(0, dom_size, size=(n, 2))
+    return JoinQuery.make(
+        [
+            Relation.make(("X0", "X1"), r01),
+            Relation.make(("X0", "X2"), r02),
+            Relation.make(("X1", "X2"), r12),
+        ]
+    )

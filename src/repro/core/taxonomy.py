@@ -193,6 +193,18 @@ def residual_size(
     return total
 
 
+def config_feasible(
+    query: JoinQuery, stats: HeavyStats, plan: HPlan, eta: Configuration
+) -> bool:
+    """Inactive-edge feasibility of η from the extended histogram: every edge
+    with both attributes in H must actually contain the η-pair, else Q'(η) is
+    empty.  Every machine holds the histogram, so ruled-out configurations
+    cost no communication (paper Sec. 6; the IR compiler consumes this)."""
+    return all(
+        heavy_pair_present(stats, query.relation_for(e), eta) for e in plan.heavy_edges
+    )
+
+
 def heavy_pair_present(
     stats: HeavyStats, rel: Relation, eta: Configuration
 ) -> bool:

@@ -6,5 +6,14 @@ paper's own w.h.p. load bounds, with overflow surfaced as a counter. Validated
 bit-for-bit against the exact-cost simulator in tests/test_dataplane_subprocess.py.
 """
 
-from .exchange import PaddedShard, hash_exchange
-from .join import local_sorted_join, hypercube_binary_join
+from .exchange import PaddedShard, blockify, hash_exchange, unblockify
+from .join import (
+    hypercube_binary_join,
+    local_join_filtered,
+    local_semijoin,
+    local_sorted_join,
+    local_unique,
+    sharded_intersect,
+    sharded_join_step,
+    sharded_semijoin,
+)

@@ -40,6 +40,44 @@ def _valid_mask(cap: int, count: jax.Array) -> jax.Array:
     return jnp.arange(cap) < count
 
 
+def blockify(rows, p: int, cap: Optional[int] = None):
+    """Host-side staging: split an (n, w) numpy array into evenly-spread
+    per-device blocks.  Returns (blocks (p, cap, w) int32, counts (p,) int32).
+    Values must fit int32 (the device word contract; INT32_MAX is reserved)."""
+    import numpy as np
+
+    rows = np.asarray(rows)
+    if rows.ndim == 1:
+        rows = rows.reshape(-1, 1)
+    n, w = rows.shape
+    if n and (rows.max() >= np.iinfo(np.int32).max or rows.min() < np.iinfo(np.int32).min):
+        raise ValueError("values exceed the int32 device word contract")
+    per = -(-n // p) if n else 0
+    if cap is None:
+        cap = max(1, per)
+    if per > cap:
+        raise ValueError(f"cap {cap} < required {per}")
+    blocks = np.zeros((p, cap, w), np.int32)
+    counts = np.zeros((p,), np.int32)
+    for i in range(p):
+        part = rows[i * per : (i + 1) * per]
+        blocks[i, : len(part)] = part
+        counts[i] = len(part)
+    return jnp.asarray(blocks), jnp.asarray(counts)
+
+
+def unblockify(blocks, counts):
+    """Inverse of `blockify` (after any exchanges): concatenate the valid
+    prefixes of all device blocks into one (n, w) int64 numpy array."""
+    import numpy as np
+
+    b = np.asarray(blocks)
+    c = np.asarray(counts)
+    parts = [b[i, : int(c[i])] for i in range(b.shape[0])]
+    out = np.concatenate(parts, axis=0) if parts else np.zeros((0, b.shape[2]), b.dtype)
+    return out.astype(np.int64)
+
+
 def pack_by_partition(
     rows: jax.Array, count: jax.Array, part: jax.Array, n_parts: int, cap_slot: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -77,6 +115,13 @@ def compact(recv: jax.Array, recv_counts: jax.Array, cap_out: int):
     return flat[:cap_out], jnp.minimum(total, cap_out), overflow
 
 
+def salt_offset(salt: int) -> int:
+    """Additive key offset derived from a routing salt (Knuth multiplicative
+    mix).  Computed host-side so it can be fed to a jitted exchange as a traced
+    scalar — one compiled executable serves every salt."""
+    return salt * 2654435761 % (2**31)
+
+
 def hash_exchange(
     rows: jax.Array,
     count: jax.Array,
@@ -85,11 +130,18 @@ def hash_exchange(
     n_parts: int,
     cap_slot: int,
     cap_out: int,
-    salt: int = 0,
+    salt=0,
 ):
     """Inside shard_map: route rows by hash(key) over `axis_name`.
-    Returns (rows_out (cap_out, w), count_out, overflow)."""
-    keys = rows[:, key_col].astype(jnp.int32) + jnp.int32(salt * 2654435761 % (2**31))
+    Returns (rows_out (cap_out, w), count_out, overflow).
+
+    ``salt`` is either a Python int (mixed via `salt_offset` at trace time) or
+    a traced int32 scalar already holding the offset."""
+    if isinstance(salt, int):
+        off = jnp.int32(salt_offset(salt))
+    else:
+        off = salt.astype(jnp.int32)
+    keys = rows[:, key_col].astype(jnp.int32) + off
     part, _ = hash_partition(keys, n_parts)
     send, send_counts, ovf1 = pack_by_partition(rows, count, part, n_parts, cap_slot)
     recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=False)

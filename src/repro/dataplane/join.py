@@ -1,26 +1,35 @@
 """Distributed equi-join on a device mesh: exchange + local sorted join.
 
-`hypercube_binary_join` is the one-round routed join R(A,B) ⋈ S(B,C) → (A,B,C):
-both relations are hash-exchanged on B over the machines axis, then each device runs
-the local sorted join (sort by key + merge_join_counts Pallas probe + static-size
-expansion). Output stays device-local (the MPC model's contract: every result tuple
+The local primitives (`local_sorted_join`, `local_semijoin`, `local_unique`)
+all run on the merge_join_counts Pallas probe with static shapes; the sharded
+primitives (`sharded_join_step`, `sharded_semijoin`, `sharded_intersect`)
+wrap them in `shard_map` bodies around capacity-padded `hash_exchange`
+collectives.  Together they lower any light-subquery stage emitted by the
+round-program compiler (repro.mpc.program) onto a device mesh — the
+`DataplaneExecutor` (repro.mpc.executors) drives them.
+
+`hypercube_binary_join` is the original one-round routed join
+R(A,B) ⋈ S(B,C) → (A,B,C), now a thin wrapper over `sharded_join_step`.
+Output stays device-local (the MPC model's contract: every result tuple
 materializes on some machine).
 
-This is the engine's Lemma 3.3 data path on real devices; the simulator remains the
-load oracle, and tests/test_dataplane_subprocess.py checks both produce identical
-result sets on 8 fake host devices."""
+The simulator remains the load oracle; tests/test_dataplane_subprocess.py
+checks both produce identical result sets on 8 fake host devices.
+
+Device word contract: values are int32 with INT32_MAX reserved as the padding
+sentinel (same convention as the kernels)."""
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
+from functools import lru_cache, partial
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..kernels.ops import merge_join_counts
-from .exchange import hash_exchange
+from .exchange import hash_exchange, salt_offset
 
 
 def local_sorted_join(
@@ -69,6 +78,234 @@ def local_sorted_join(
     return out, jnp.minimum(total, cap_out), overflow
 
 
+def _compact_prefix(rows: jax.Array, keep: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Stable-compact kept rows to a zero-padded valid prefix. rows (cap, ...)."""
+    order = jnp.argsort(~keep, stable=True)
+    cnt = keep.sum()
+    out = rows[order]
+    mask = jnp.arange(rows.shape[0]) < cnt
+    if out.ndim == 2:
+        out = jnp.where(mask[:, None], out, 0)
+    else:
+        out = jnp.where(mask, out, 0)
+    return out, cnt
+
+
+def local_unique(vals: jax.Array, count: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(cap,) padded value list → sorted distinct values in a valid prefix."""
+    cap = vals.shape[0]
+    big = jnp.iinfo(jnp.int32).max
+    v = jnp.sort(jnp.where(jnp.arange(cap) < count, vals, big))
+    first = jnp.concatenate([jnp.ones((1,), bool), v[1:] != v[:-1]])
+    return _compact_prefix(v, first & (v < big))
+
+
+def local_semijoin(
+    rows: jax.Array, count: jax.Array, col: int, keys: jax.Array, kcount: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Keep rows whose rows[:, col] appears in keys[:kcount] (device-local
+    semi-join via the merge_join_counts probe). Output rows are reordered by
+    key and compacted to a valid prefix (multiset semantics)."""
+    cap, _ = rows.shape
+    capk = keys.shape[0]
+    big = jnp.iinfo(jnp.int32).max
+    rk = jnp.where(jnp.arange(cap) < count, rows[:, col], big)
+    order = jnp.argsort(rk)
+    rows_s, rk_s = rows[order], rk[order]
+    kv = jnp.sort(jnp.where(jnp.arange(capk) < kcount, keys, big))
+    lower, upper = merge_join_counts(rk_s, kv)
+    member = (upper > lower) & (rk_s < big)
+    return _compact_prefix(rows_s, member)
+
+
+def local_join_filtered(
+    a_rows: jax.Array, a_count: jax.Array,
+    b_rows: jax.Array, b_count: jax.Array,
+    ka: int, kb: int, cap_out: int,
+    dup_pairs: Tuple[Tuple[int, int], ...] = (),
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """`local_sorted_join` plus equality filtering on duplicated attributes.
+
+    ``dup_pairs`` lists (a_col, b_col) pairs (b_col ≠ kb) of attributes shared
+    beyond the join key — the cyclic-subquery case.  Matching rows are kept,
+    the duplicate B-side columns dropped; output scheme is A's columns then
+    B's columns minus kb and minus the dup b_cols."""
+    out, cnt, ovf = local_sorted_join(a_rows, a_count, b_rows, b_count, ka, kb, cap_out)
+    if not dup_pairs:       # nothing to filter; compaction would be the identity
+        return out, cnt, ovf
+    wa = a_rows.shape[1]
+    wb = b_rows.shape[1]
+    b_cols = [c for c in range(wb) if c != kb]
+    keep = jnp.arange(cap_out) < cnt
+    drop = set()
+    for ca, cb in dup_pairs:
+        co = wa + b_cols.index(cb)
+        keep &= out[:, ca] == out[:, co]
+        drop.add(co)
+    if drop:
+        keep_cols = [c for c in range(out.shape[1]) if c not in drop]
+        out = out[:, jnp.array(keep_cols, jnp.int32)]
+    out, cnt = _compact_prefix(out, keep)
+    return out, cnt, ovf
+
+
+@lru_cache(maxsize=512)
+def _join_step_fn(mesh, axis_name, ka, kb, cap_slot, cap_mid, cap_out, dup_pairs):
+    """Build (once per static structure) the jitted shard_map join step.
+    jit's own cache handles input-shape variation, and the salt rides along as
+    a traced scalar — one compiled executable serves every (H, η) stage of the
+    same shape; this cache keeps repeated executor calls from re-tracing."""
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(a_rows, a_cnt, b_rows, b_cnt, off):
+        a_rows, a_cnt, b_rows, b_cnt = a_rows[0], a_cnt[0], b_rows[0], b_cnt[0]
+        a2, ca, o1 = hash_exchange(a_rows, a_cnt, ka, axis_name, p, cap_slot, cap_mid, off)
+        b2, cb, o2 = hash_exchange(b_rows, b_cnt, kb, axis_name, p, cap_slot, cap_mid, off)
+        out, cnt, o3 = local_join_filtered(a2, ca, b2, cb, ka, kb, cap_out, dup_pairs)
+        return out[None], cnt[None], (o1 + o2 + o3)[None]
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None, None), P(axis_name), P()),
+        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name)),
+        check_rep=False,
+    ))
+
+
+def sharded_join_step(
+    mesh,
+    axis_name: str,
+    a_global: jax.Array, a_counts: jax.Array,   # (p, capA, wa), (p,) device-sharded
+    b_global: jax.Array, b_counts: jax.Array,
+    ka: int, kb: int,
+    cap_slot: int, cap_mid: int, cap_out: int,
+    dup_pairs: Tuple[Tuple[int, int], ...] = (),
+    salt: int = 0,
+):
+    """One distributed binary-join step under shard_map: both sides are
+    hash-exchanged on their key column, then joined locally (with optional
+    duplicate-attribute filtering).  Inputs/outputs sharded over axis 0.
+    Returns (out (p, cap_out, w), counts (p,), overflow (p,))."""
+    fn = _join_step_fn(
+        mesh, axis_name, ka, kb, cap_slot, cap_mid, cap_out, tuple(dup_pairs)
+    )
+    return fn(a_global, a_counts, b_global, b_counts, jnp.int32(salt_offset(salt)))
+
+
+@lru_cache(maxsize=512)
+def _semijoin_fn(mesh, axis_name, cols, cap_slot, cap_out):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(rows, cnt, offs, *pieces):
+        rows, cnt = rows[0], cnt[0]
+        ovf = jnp.zeros((), jnp.int32)
+        for i, col in enumerate(cols):
+            pv, pc = pieces[2 * i][0], pieces[2 * i + 1][0]
+            rows, cnt, o = hash_exchange(
+                rows, cnt, col, axis_name, p, cap_slot, cap_out, offs[i]
+            )
+            ovf += o.astype(jnp.int32)
+            rows, cnt = local_semijoin(rows, cnt, col, pv, pc)
+        return rows[None], cnt[None], ovf[None]
+
+    piece_specs = []
+    for _ in cols:
+        piece_specs += [P(axis_name, None), P(axis_name)]
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name, None, None), P(axis_name), P(None), *piece_specs),
+        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name)),
+        check_rep=False,
+    ))
+
+
+def sharded_semijoin(
+    mesh,
+    axis_name: str,
+    rows_global: jax.Array, counts: jax.Array,          # (p, cap, w), (p,)
+    filters: Sequence[Tuple[int, int, jax.Array, jax.Array]],
+    cap_slot: int, cap_out: int,
+):
+    """Semi-join a sharded relation against co-located unary pieces.
+
+    ``filters`` is a static sequence of (col, salt, piece_vals (p, capx),
+    piece_counts (p,)): for each entry the rows are hash-exchanged on ``col``
+    with ``salt`` (the same salt that distributed the piece, so piece and rows
+    land on the same device) and filtered by membership.  Lowers the SemiJoin
+    op of the round-program IR.  Returns (rows, counts, overflow)."""
+    cols = tuple(int(col) for col, _, _, _ in filters)
+    offs = jnp.asarray([salt_offset(int(s)) for _, s, _, _ in filters], jnp.int32)
+    piece_args = []
+    for _, _, pv, pc in filters:
+        piece_args += [pv, pc]
+    fn = _semijoin_fn(mesh, axis_name, cols, cap_slot, cap_out)
+    return fn(rows_global, counts, offs, *piece_args)
+
+
+@lru_cache(maxsize=512)
+def _intersect_fn(mesh, axis_name, n, cap_slot, cap_out):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(off, *flat):
+        ovf = jnp.zeros((), jnp.int32)
+        cur = None
+        cur_cnt = None
+        for i in range(n):
+            v, c = flat[2 * i][0], flat[2 * i + 1][0]
+            ex, exc, o = hash_exchange(
+                v[:, None], c, 0, axis_name, p, cap_slot, cap_out, off
+            )
+            ovf += o.astype(jnp.int32)
+            uv, uc = local_unique(ex[:, 0], exc)
+            if cur is None:
+                cur, cur_cnt = uv, uc
+            else:
+                kept, kc = local_semijoin(cur[:, None], cur_cnt, 0, uv, uc)
+                cur, cur_cnt = kept[:, 0], kc
+        return cur[None], cur_cnt[None], ovf[None]
+
+    specs = [P()]
+    for _ in range(n):
+        specs += [P(axis_name, None), P(axis_name)]
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=tuple(specs),
+        out_specs=(P(axis_name, None), P(axis_name), P(axis_name)),
+        check_rep=False,
+    ))
+
+
+def sharded_intersect(
+    mesh,
+    axis_name: str,
+    pieces: Sequence[Tuple[jax.Array, jax.Array]],      # [(vals (p, cap_i), counts (p,))]
+    salt: int,
+    cap_slot: int, cap_out: int,
+):
+    """Distributed intersection of unary relations (the R''_X(η) step).
+
+    Every piece is hash-exchanged on its value with the shared ``salt`` (all
+    copies of a value meet on one device), deduplicated, and intersected
+    locally via the merge_join_counts membership probe.  Lowers the
+    HashPartition op of the round-program IR.  Returns
+    (vals (p, cap_out), counts (p,), overflow (p,)) distributed by
+    hash(value, salt) — ready to serve as a `sharded_semijoin` filter."""
+    args = []
+    for pv, pc in pieces:
+        args += [pv, pc]
+    fn = _intersect_fn(mesh, axis_name, len(pieces), cap_slot, cap_out)
+    return fn(jnp.int32(salt_offset(salt)), *args)
+
+
 def hypercube_binary_join(
     mesh,
     axis_name: str,
@@ -77,24 +314,9 @@ def hypercube_binary_join(
     ka: int, kb: int,
     cap_slot: int, cap_mid: int, cap_out: int,
 ):
-    """Full distributed join under shard_map. Inputs/outputs sharded over axis 0.
-    Returns (out (p, cap_out, w), counts (p,), overflow (p,))."""
-    from jax.experimental.shard_map import shard_map
-
-    p = mesh.shape[axis_name]
-
-    def body(a_rows, a_cnt, b_rows, b_cnt):
-        a_rows, a_cnt, b_rows, b_cnt = a_rows[0], a_cnt[0], b_rows[0], b_cnt[0]
-        a2, ca, o1 = hash_exchange(a_rows, a_cnt, ka, axis_name, p, cap_slot, cap_mid)
-        b2, cb, o2 = hash_exchange(b_rows, b_cnt, kb, axis_name, p, cap_slot, cap_mid)
-        out, cnt, o3 = local_sorted_join(a2, ca, b2, cb, ka, kb, cap_out)
-        return out[None], cnt[None], (o1 + o2 + o3)[None]
-
-    fn = shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None, None), P(axis_name)),
-        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name)),
-        check_rep=False,
+    """The one-round routed join R(A,B) ⋈ S(B,C): a single `sharded_join_step`
+    with no duplicate attributes (kept as the named Lemma 3.3 entry point)."""
+    return sharded_join_step(
+        mesh, axis_name, a_global, a_counts, b_global, b_counts,
+        ka, kb, cap_slot, cap_mid, cap_out,
     )
-    return fn(a_global, a_counts, b_global, b_counts)

@@ -4,6 +4,32 @@ The simulator is the *paper-faithful* execution substrate: the MPC model's cost 
 "max words received by any machine in a round" (paper Sec. 1.1) — a communication metric
 that must be metered exactly to validate the Õ(m/p^{1/ρ}) claim. The JAX data plane
 (repro.dataplane) mirrors the communication-heavy phases on a device mesh.
+
+Layering (docs/DESIGN.md §7): ``program`` compiles (query, histogram, p) into a
+round-program IR; ``executors`` provides the pluggable backends
+(SimulatorExecutor = exact load oracle, DataplaneExecutor = JAX device mesh);
+``engine.mpc_join`` is the historical compile-and-simulate entry point.
 """
 
 from .simulator import MPCSimulator, HashFamily
+from .program import (
+    BroadcastSizes,
+    GridRoute,
+    HashPartition,
+    LocalJoin,
+    RoundOp,
+    RoundProgram,
+    RouteResidual,
+    Scatter,
+    SemiJoin,
+    compile_plan,
+    fuse_semijoin_pass,
+)
+from .executors import (
+    DataplaneExecutor,
+    DataplaneJoinResult,
+    DataplaneUnsupported,
+    MPCJoinResult,
+    SimulatorExecutor,
+)
+from .engine import mpc_join

@@ -1,111 +1,32 @@
-"""The MPC join algorithm of Theorem 6.2, end to end, with exact load metering.
+"""The MPC join algorithm of Theorem 6.2: compile to the round-program IR,
+then execute on the exact-cost simulator.
 
-Round structure (constant, independent of the query — paper Sec. 6; all H ⊆ attset(Q)
-and all configurations η are processed inside the *same* physical rounds):
+The round structure (constant, independent of the query — paper Sec. 6; all
+H ⊆ attset(Q) and all configurations η are processed inside the *same*
+physical rounds) now lives in two places:
 
-  stats-candidates / stats-counts / stats-extended   (preprocessing histogram)
-  step1          route residual tuples of every Q'(η) to its p'_η-machine group
-  step2-unary    hash-partition unary residuals; intersect → R''_X(η)
-  step2-bx       semi-join light edges on X
-  step2-by       semi-join light edges on Y            → R''_e(η)
-  step3-sizes    broadcast |R''_X(η)| pieces (the paper's O(p²) statistics round)
-  step3-route    Lemma 3.1 grid (isolated CP) + Lemma 3.3 HyperCube (light subquery),
-                 composed via the Lemma 3.2 matrix; one round
-  (output)       local joins; every result tuple materializes on exactly one machine
+  * ``repro.mpc.program``   — what the rounds are and who routes what
+                              (``compile_plan`` → :class:`RoundProgram`);
+  * ``repro.mpc.executors`` — who executes them (:class:`SimulatorExecutor`
+                              for exact load metering, :class:`DataplaneExecutor`
+                              for the JAX device mesh).
 
-Engine-level choices the paper leaves open (documented in DESIGN.md §6):
-  * virtual machine groups are hashed onto physical machines;
-  * configurations whose residual input is empty on an *active* edge are skipped early
-    (their join is empty);
-  * inactive-edge (heavy-heavy) feasibility is checked against the extended histogram
-    that every machine holds, so ruled-out η cost no communication.
+``mpc_join`` is the historical entry point and is now a thin wrapper:
+scatter inputs, run the 3-round statistics protocol, compile, execute.
+Engine-level choices the paper leaves open are documented in docs/DESIGN.md §6.
 """
 
 from __future__ import annotations
 
-import math
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import Optional, Sequence
 
 from ..core.hypergraph import fractional_edge_cover
-from ..core.planner import (
-    ConfigPlan,
-    MachineGroup,
-    _stable_base,
-    grid_dims,
-    heavy_parameter,
-    step1_allocation,
-    step3_allocation,
-)
-from ..core.query import Attr, JoinQuery, Relation, reference_join
-from ..core.taxonomy import (
-    Configuration,
-    HPlan,
-    HeavyStats,
-    configurations,
-    plan_for_h,
-    residual_size,
-)
-from .cartesian import CartesianGrid, route_cartesian
-from .hypercube import HyperCubeGrid, route_hypercube
-from .simulator import MPCSimulator, scatter_input
+from ..core.planner import heavy_parameter
+from ..core.query import Attr, JoinQuery
+from .executors import MPCJoinResult, SimulatorExecutor
+from .program import compile_plan
+from .simulator import MPCSimulator
 from .statistics import distributed_stats
-
-
-@dataclass
-class MPCJoinResult:
-    p: int
-    lam: int
-    rho: float
-    m: int
-    count: int
-    rows: Optional[np.ndarray]          # over sorted(attset), if materialized
-    sim: MPCSimulator
-    per_h_counts: Dict[Tuple[Attr, ...], int]
-
-    @property
-    def bound(self) -> float:
-        """The claimed load bound m / p^{1/ρ} (polylog factors not included)."""
-        return self.m / (self.p ** (1.0 / self.rho))
-
-    @property
-    def load(self) -> int:
-        return self.sim.parallel_total_load
-
-    @property
-    def load_ratio(self) -> float:
-        return self.load / max(1.0, self.bound)
-
-
-def _send_grouped(sim: MPCSimulator, phys: np.ndarray, tag, rows: np.ndarray) -> None:
-    """Group rows by destination and send one message per destination."""
-    if rows.ndim == 1:
-        rows = rows.reshape(-1, 1)
-    if rows.shape[0] == 0:
-        return
-    order = np.argsort(phys, kind="stable")
-    ps, rs = phys[order], rows[order]
-    uniq = np.unique(ps)
-    bounds = np.append(np.searchsorted(ps, uniq), ps.shape[0])
-    for i, dst in enumerate(uniq.tolist()):
-        sim.send(int(dst), tag, rs[bounds[i] : bounds[i + 1]])
-
-
-@dataclass
-class _CfgState:
-    plan: HPlan
-    cfg: ConfigPlan
-    hkey: Tuple[Attr, ...]
-    ekey: Tuple[int, ...]
-    iso_order: List[Attr] = field(default_factory=list)   # isolated attrs by size desc
-    iso_sizes: Dict[Attr, int] = field(default_factory=dict)
-    offsets: Dict[Tuple[Attr, int], int] = field(default_factory=dict)  # (X, mid) -> id offset
-    grid: Optional[CartesianGrid] = None
-    hc_grid: Optional[HyperCubeGrid] = None
-    skip: bool = False
 
 
 def mpc_join(
@@ -120,458 +41,18 @@ def mpc_join(
     """Run the full Theorem 6.2 algorithm on p simulated machines.
 
     ``h_subsets`` restricts the taxonomy to specific H sets (testing); default = all.
-    ``fuse_semijoin`` enables the beyond-paper round fusion (see EXPERIMENTS §Perf):
-    step2-bx/step2-by are fused into one round by routing each light tuple to its
-    Y-partition with an X-membership *bitmap request* piggybacked — implemented as
-    routing by Y while filtering on X at the sender using the sender-local R''_X
-    replica obtained in step2-unary (valid because the X-partition of the sender in
-    step2-bx is exactly where the tuple sits after step2-unary routing).
+    ``fuse_semijoin`` enables the beyond-paper round fusion (a program-rewrite
+    pass; see :func:`repro.mpc.program.fuse_semijoin_pass` and EXPERIMENTS §Perf).
     """
-    g = query.hypergraph
-    rho_val = float(fractional_edge_cover(g)[0])
-    attset = query.attset
-    k = len(attset)
+    rho_val = float(fractional_edge_cover(query.hypergraph)[0])
     if lam is None:
         lam = heavy_parameter(p, rho_val)
 
     sim = MPCSimulator(p, seed=seed)
-    for rel in query.relations:
-        scatter_input(sim, ("in", rel.edge), rel.data, seed=seed + 17)
-
-    stats = distributed_stats(sim, query, lam)
-
-    if h_subsets is None:
-        import itertools as _it
-
-        h_subsets = [
-            h for r in range(k + 1) for h in _it.combinations(attset, r)
-        ]
-
-    # ---- planning (host-side metadata; every machine could derive it identically
-    # from the shared histogram — zero communication, paper Sec. 6) ------------------
-    plans: List[Tuple[HPlan, List[ConfigPlan]]] = []
-    emit_only: List[Tuple[HPlan, Configuration]] = []
-    for h in h_subsets:
-        plan = plan_for_h(query, h)
-        cfg_sizes = []
-        for eta in configurations(stats, plan.h_set):
-            # inactive-edge feasibility from the shared histogram
-            feasible = True
-            for e in plan.heavy_edges:
-                rel = query.relation_for(e)
-                x_attr, y_attr = rel.scheme
-                if stats.pair.get((e, eta.value(x_attr), eta.value(y_attr)), 0) == 0:
-                    feasible = False
-                    break
-            if not feasible:
-                continue
-            if len(plan.h_set) == k:
-                emit_only.append((plan, eta))
-                continue
-            m_eta = residual_size(query, stats, plan, eta)
-            if m_eta == 0 and (plan.light_edges or plan.cross_edges):
-                # some active edge exists; zero residual input ⇒ empty join.
-                # (unless ALL active edges are... m_eta==0 means all residuals empty)
-                continue
-            cfg_sizes.append((eta, m_eta))
-        cfgs = step1_allocation(query, stats, plan, cfg_sizes, p)
-        if cfgs:
-            plans.append((plan, cfgs))
-
-    # H = attset(Q): every edge inactive; η itself is the result tuple (no comm).
-    out_cols = list(attset)
-    outputs: Dict[int, List[np.ndarray]] = defaultdict(list)
-    counts_per_h: Dict[Tuple[Attr, ...], int] = defaultdict(int)
-    for plan, eta in emit_only:
-        mid = _stable_base(p, "emit", plan.h_set, eta.values)
-        row = np.array(
-            [[eta.value(a) for a in out_cols]], dtype=np.int64
-        )
-        outputs[mid].append(row)
-        counts_per_h[plan.h_set] += 1
-
-    states: List[_CfgState] = [
-        _CfgState(
-            plan=plan,
-            cfg=cfg,
-            hkey=plan.h_set,
-            ekey=cfg.eta.values,
-        )
-        for plan, cfgs in plans
-        for cfg in cfgs
-    ]
-
-    # ---- step 1: route residual tuples --------------------------------------------
-    sim.begin_round("step1")
-    for mid in range(sim.p):
-        mrng = np.random.default_rng(seed * 1_000_003 + mid)
-        local_cache: Dict = {}
-        for rel in query.relations:
-            local = sim.local(mid, ("in", rel.edge))
-            if local.shape[0] == 0:
-                continue
-            x_attr, y_attr = rel.scheme
-            hx = stats.is_heavy(x_attr, local[:, 0])
-            hy = stats.is_heavy(y_attr, local[:, 1])
-            local_cache[rel.edge] = (local, hx, hy)
-        for st in states:
-            plan, cfg = st.plan, st.cfg
-            h = set(plan.h_set)
-            grp = cfg.step1_group
-            for rel in query.relations:
-                if rel.edge not in local_cache:
-                    continue
-                local, hx, hy = local_cache[rel.edge]
-                x_attr, y_attr = rel.scheme
-                inter = rel.edge & h
-                if len(inter) == 2:
-                    continue
-                if len(inter) == 0:
-                    sel = ~hx & ~hy
-                    rows = local[sel]
-                else:
-                    (heavy_attr,) = inter
-                    if heavy_attr == x_attr:
-                        sel = (local[:, 0] == cfg.eta.value(x_attr)) & ~hy
-                        rows = local[sel][:, 1:2]   # project to light attr
-                    else:
-                        sel = (local[:, 1] == cfg.eta.value(y_attr)) & ~hx
-                        rows = local[sel][:, 0:1]
-                if rows.shape[0] == 0:
-                    continue
-                virt = mrng.integers(0, grp.size, size=rows.shape[0])
-                phys = (grp.base + virt) % p
-                _send_grouped(sim, phys, ("r1", st.hkey, st.ekey, rel.edge), rows)
-    sim.end_round()
-
-    # ---- step 2a: unary partition + intersection -----------------------------------
-    sim.begin_round("step2-unary")
-    for st in states:
-        plan, cfg = st.plan, st.cfg
-        grp = cfg.step1_group
-        for e in plan.cross_edges:
-            rel = query.relation_for(e)
-            light_attr = next(iter(e - set(plan.h_set)))
-            tag_in = ("r1", st.hkey, st.ekey, e)
-            for mid in sim.machines_with(tag_in):
-                rows = sim.local(mid, tag_in, arity=1)
-                virt = sim.hashes.hash((st.hkey, st.ekey, "sj", light_attr), rows[:, 0], grp.size)
-                phys = (grp.base + virt) % p
-                _send_grouped(sim, phys, ("u", st.hkey, st.ekey, light_attr, e), rows)
-    sim.end_round()
-
-    # local intersection → R''_X pieces (no communication)
-    cross_by_attr: Dict[Tuple[Tuple[Attr, ...], Attr], List] = defaultdict(list)
-    for st in states:
-        for e in st.plan.cross_edges:
-            light_attr = next(iter(e - set(st.plan.h_set)))
-            cross_by_attr[(st.hkey, light_attr)].append(e)
-    for st in states:
-        plan = st.plan
-        for x in plan.border:
-            es = [e for e in plan.cross_edges if x in e]
-            for mid in range(sim.p):
-                pieces = []
-                ok = True
-                for e in es:
-                    vals = sim.local(mid, ("u", st.hkey, st.ekey, x, e), arity=1)
-                    if vals.shape[0] == 0:
-                        ok = False
-                        break
-                    pieces.append(np.unique(vals[:, 0]))
-                if not ok:
-                    continue
-                inter = pieces[0]
-                for arr in pieces[1:]:
-                    inter = np.intersect1d(inter, arr, assume_unique=True)
-                if inter.size:
-                    sim.stores[mid][("ux", st.hkey, st.ekey, x)] = [inter.reshape(-1, 1)]
-
-    # ---- step 2b/2c: semi-join light edges ------------------------------------------
-    def _filter_by_membership(mid, rows, col, attr, st):
-        """Keep rows whose rows[:, col] is in the machine-local R''_attr piece."""
-        piece = sim.local(mid, ("ux", st.hkey, st.ekey, attr), arity=1)[:, 0]
-        if piece.size == 0:
-            return rows[:0]
-        return rows[np.isin(rows[:, col], piece)]
-
-    if not fuse_semijoin:
-        sim.begin_round("step2-bx")
-        for st in states:
-            grp = st.cfg.step1_group
-            for e in st.plan.light_edges:
-                rel = query.relation_for(e)
-                x_attr = rel.scheme[0]
-                tag_in = ("r1", st.hkey, st.ekey, e)
-                for mid in sim.machines_with(tag_in):
-                    rows = sim.local(mid, tag_in, arity=2)
-                    virt = sim.hashes.hash((st.hkey, st.ekey, "sj", x_attr), rows[:, 0], grp.size)
-                    phys = (grp.base + virt) % p
-                    _send_grouped(sim, phys, ("bx", st.hkey, st.ekey, e), rows)
-        sim.end_round()
-
-        sim.begin_round("step2-by")
-        for st in states:
-            grp = st.cfg.step1_group
-            for e in st.plan.light_edges:
-                rel = query.relation_for(e)
-                x_attr, y_attr = rel.scheme
-                tag_in = ("bx", st.hkey, st.ekey, e)
-                for mid in sim.machines_with(tag_in):
-                    rows = sim.local(mid, tag_in, arity=2)
-                    if x_attr in st.plan.border:
-                        rows = _filter_by_membership(mid, rows, 0, x_attr, st)
-                    if rows.shape[0] == 0:
-                        continue
-                    virt = sim.hashes.hash((st.hkey, st.ekey, "sj", y_attr), rows[:, 1], grp.size)
-                    phys = (grp.base + virt) % p
-                    _send_grouped(sim, phys, ("rr", st.hkey, st.ekey, e), rows)
-        sim.end_round()
-    else:
-        # Beyond-paper fusion: route directly to the Y partition; X-filtering happens
-        # at the Y-side against a replicated X piece fetched in the same round (the
-        # bitmap exchange below), saving one full data round. See EXPERIMENTS §Perf.
-        sim.begin_round("step2-fused")
-        for st in states:
-            grp = st.cfg.step1_group
-            for e in st.plan.light_edges:
-                rel = query.relation_for(e)
-                x_attr, y_attr = rel.scheme
-                tag_in = ("r1", st.hkey, st.ekey, e)
-                for mid in sim.machines_with(tag_in):
-                    rows = sim.local(mid, tag_in, arity=2)
-                    # membership of X values must be resolved; ask the X-partition by
-                    # sending (x, y) keyed by X — identical cost to step2-bx, but the
-                    # Y-routing is *piggybacked*: the X-partition machine forwards in
-                    # the same round using its local piece (allowed: the forward is a
-                    # function of data it already has + the arriving message only in
-                    # the NEXT round; hence this fusion trades one round for routing
-                    # via hash(X) then local re-route — net: 1 round saved when X is
-                    # not a border attribute, else falls back).
-                    if x_attr not in st.plan.border:
-                        virt = sim.hashes.hash((st.hkey, st.ekey, "sj", y_attr), rows[:, 1], grp.size)
-                        phys = (grp.base + virt) % p
-                        _send_grouped(sim, phys, ("rr", st.hkey, st.ekey, e), rows)
-                    else:
-                        virt = sim.hashes.hash((st.hkey, st.ekey, "sj", x_attr), rows[:, 0], grp.size)
-                        phys = (grp.base + virt) % p
-                        _send_grouped(sim, phys, ("bx", st.hkey, st.ekey, e), rows)
-        sim.end_round()
-        sim.begin_round("step2-by")
-        for st in states:
-            grp = st.cfg.step1_group
-            for e in st.plan.light_edges:
-                rel = query.relation_for(e)
-                x_attr, y_attr = rel.scheme
-                if x_attr not in st.plan.border:
-                    continue
-                tag_in = ("bx", st.hkey, st.ekey, e)
-                for mid in sim.machines_with(tag_in):
-                    rows = sim.local(mid, tag_in, arity=2)
-                    rows = _filter_by_membership(mid, rows, 0, x_attr, st)
-                    if rows.shape[0] == 0:
-                        continue
-                    virt = sim.hashes.hash((st.hkey, st.ekey, "sj", y_attr), rows[:, 1], grp.size)
-                    phys = (grp.base + virt) % p
-                    _send_grouped(sim, phys, ("rr", st.hkey, st.ekey, e), rows)
-        sim.end_round()
-
-    # Y-side filtering is local (the piece lives where the hash sent the row).
-    for st in states:
-        for e in st.plan.light_edges:
-            rel = query.relation_for(e)
-            y_attr = rel.scheme[1]
-            if y_attr not in st.plan.border:
-                continue
-            tag = ("rr", st.hkey, st.ekey, e)
-            for mid in sim.machines_with(tag):
-                rows = sim.local(mid, tag, arity=2)
-                rows = _filter_by_membership(mid, rows, 1, y_attr, st)
-                sim.stores[mid][tag] = [rows]
-
-    # ---- step 3 sizes: broadcast |R''_X| pieces (paper's O(p²) stats round) ---------
-    sim.begin_round("step3-sizes")
-    cfg_index = {(st.hkey, st.ekey): i for i, st in enumerate(states)}
-    attr_index = {a: i for i, a in enumerate(attset)}
-    for st in states:
-        for x in st.plan.isolated:
-            tag = ("ux", st.hkey, st.ekey, x)
-            for mid in sim.machines_with(tag):
-                cnt = sim.local(mid, tag, arity=1).shape[0]
-                msg = np.array(
-                    [[cfg_index[(st.hkey, st.ekey)], attr_index[x], mid, cnt]],
-                    dtype=np.int64,
-                )
-                sim.broadcast(("sz",), msg)
-    sim.end_round()
-
-    size_rows = sim.local(0, ("sz",), arity=4) if sim.machines_with(("sz",)) else np.zeros((0, 4), np.int64)
-    piece_sizes: Dict[Tuple[int, int], List[Tuple[int, int]]] = defaultdict(list)
-    for ci, ai, mid, cnt in size_rows.tolist():
-        piece_sizes[(ci, ai)].append((mid, cnt))
-
-    for i, st in enumerate(states):
-        iso_sizes = {}
-        for x in st.plan.isolated:
-            entries = sorted(piece_sizes.get((i, attr_index[x]), []))
-            total = sum(c for _, c in entries)
-            iso_sizes[x] = total
-            off = 0
-            for mid, c in entries:
-                st.offsets[(x, mid)] = off
-                off += c
-        st.iso_sizes = iso_sizes
-        if any(v == 0 for v in iso_sizes.values()):
-            st.skip = True
-            continue
-        step3_allocation(query, stats, st.plan, st.cfg, iso_sizes, p, rho_val)
-        st.iso_order = sorted(st.plan.isolated, key=lambda a: -iso_sizes[a])
-        if st.iso_order:
-            st.grid = CartesianGrid([iso_sizes[a] for a in st.iso_order], st.cfg.cp_machines)
-        l_minus_i = [a for a in st.plan.light if a not in st.plan.isolated]
-        if l_minus_i:
-            st.hc_grid = HyperCubeGrid(l_minus_i, {a: stats.lam for a in l_minus_i})
-
-    # ---- step 3 route: Lemma 3.1 grid × Lemma 3.3 HyperCube (Lemma 3.2 matrix) ------
-    sim.begin_round("step3-route")
-    for st in states:
-        if st.skip:
-            continue
-        grp = st.cfg.step3_group
-        hc_size = st.hc_grid.size if st.hc_grid else 1
-        cp_size = st.grid.size if st.grid else 1
-
-        # CP side: every grid cell is instantiated in every HC column.
-        if st.grid:
-            for li, x in enumerate(st.iso_order):
-                tag = ("ux", st.hkey, st.ekey, x)
-                for mid in sim.machines_with(tag):
-                    vals = sim.local(mid, tag, arity=1)
-                    ids = st.offsets[(x, mid)] + np.arange(vals.shape[0], dtype=np.int64)
-                    if li < st.grid.t_prime:
-                        cells = st.grid.cells_for_ids(li, ids)
-                        for combo in range(cells.shape[1]):
-                            flat = cells[:, combo]
-                            for cell in np.unique(flat).tolist():
-                                rows = vals[flat == cell]
-                                for h_cell in range(hc_size):
-                                    v = cell * hc_size + h_cell
-                                    sim.send(grp.phys(v), ("cp", st.hkey, st.ekey, v, x), rows)
-                    else:
-                        for cell in range(cp_size):
-                            for h_cell in range(hc_size):
-                                v = cell * hc_size + h_cell
-                                sim.send(grp.phys(v), ("cp", st.hkey, st.ekey, v, x), vals)
-
-        # HC side: every HC cell instantiated in every CP row.
-        if st.hc_grid:
-            for e in st.plan.light_edges:
-                rel = query.relation_for(e)
-                tag = ("rr", st.hkey, st.ekey, e)
-                for mid in sim.machines_with(tag):
-                    rows = sim.local(mid, tag, arity=2)
-
-                    def deliver(h_cell, out_tag, rs, _grp=grp, _hc=hc_size, _cp=cp_size, _st=st):
-                        for c in range(_cp):
-                            v = c * _hc + h_cell
-                            sim.send(_grp.phys(v), ("hc", _st.hkey, _st.ekey, v, out_tag), rs)
-
-                    route_hypercube(
-                        sim,
-                        st.hc_grid,
-                        [(rel.scheme, e, rows)],
-                        salt=(st.hkey, st.ekey, "hc"),
-                        deliver=deliver,
-                    )
-    sim.end_round()
-
-    # ---- output: local joins, exactly-once ------------------------------------------
-    total_count = 0
-    for st in states:
-        if st.skip:
-            continue
-        plan = st.plan
-        grp = st.cfg.step3_group
-        hc_size = st.hc_grid.size if st.hc_grid else 1
-        cp_size = st.grid.size if st.grid else 1
-        l_minus_i = [a for a in plan.light if a not in plan.isolated]
-        h_count = 0
-        for v in range(grp.size):
-            mid = grp.phys(v)
-            # light side
-            if plan.light_edges:
-                frags = []
-                ok = True
-                for e in plan.light_edges:
-                    rel = query.relation_for(e)
-                    rows = sim.local(mid, ("hc", st.hkey, st.ekey, v, e), arity=2)
-                    if rows.shape[0] == 0:
-                        ok = False
-                        break
-                    frags.append(Relation.make(rel.scheme, rows))
-                if not ok:
-                    continue
-                light_join = reference_join(JoinQuery.make(frags))
-                light_rows = light_join.data  # over sorted(l_minus_i)
-                if light_rows.shape[0] == 0:
-                    continue
-            else:
-                light_rows = np.zeros((1, 0), dtype=np.int64)
-
-            # CP side
-            cp_lists = []
-            ok = True
-            for x in st.iso_order:
-                vals = sim.local(mid, ("cp", st.hkey, st.ekey, v, x), arity=1)
-                vals = np.unique(vals[:, 0])
-                if vals.size == 0:
-                    ok = False
-                    break
-                cp_lists.append(vals)
-            if not ok:
-                continue
-
-            n_cp = math.prod(arr.size for arr in cp_lists) if cp_lists else 1
-            n_here = light_rows.shape[0] * n_cp
-            h_count += n_here
-            if materialize and n_here:
-                rows = light_rows
-                cols = sorted(l_minus_i)
-                for x, vals in zip(st.iso_order, cp_lists):
-                    nn = rows.shape[0]
-                    rows = np.repeat(rows, vals.size, axis=0)
-                    rows = np.concatenate(
-                        [rows, np.tile(vals, nn).reshape(-1, 1)], axis=1
-                    )
-                    cols.append(x)
-                for a in plan.h_set:
-                    rows = np.concatenate(
-                        [rows, np.full((rows.shape[0], 1), st.cfg.eta.value(a), np.int64)],
-                        axis=1,
-                    )
-                    cols.append(a)
-                perm = [cols.index(a) for a in out_cols]
-                outputs[mid].append(rows[:, perm])
-        counts_per_h[st.hkey] += h_count
-
-    rows_out = None
-    if materialize:
-        chunks = [r for parts in outputs.values() for r in parts]
-        rows_out = (
-            np.concatenate(chunks, axis=0)
-            if chunks
-            else np.zeros((0, len(out_cols)), dtype=np.int64)
-        )
-
-    total_count = sum(counts_per_h.values())
-
-    return MPCJoinResult(
-        p=p,
-        lam=stats.lam,
-        rho=rho_val,
-        m=stats.m,
-        count=total_count,
-        rows=rows_out,
-        sim=sim,
-        per_h_counts=dict(counts_per_h),
+    executor = SimulatorExecutor(sim, seed=seed)
+    executor.place_inputs(query)                      # Scatter semantics
+    stats = distributed_stats(sim, query, lam)        # 3 metered histogram rounds
+    program = compile_plan(
+        query, stats, p, h_subsets=h_subsets, fuse_semijoin=fuse_semijoin
     )
+    return executor.run(program, materialize=materialize)

@@ -1,0 +1,422 @@
+"""Round-program IR for the Theorem 6.2 join (paper Sec. 6).
+
+``compile_plan`` turns (query, histogram, p) into a :class:`RoundProgram`: the
+complete host-side plan of the constant-round algorithm — which (H, η) stages
+exist, how many machines each gets, and the fixed sequence of :class:`RoundOp`s
+that any execution backend must perform.  Compilation is pure metadata work
+(every machine could derive it identically from the shared histogram, so it
+costs zero communication); all data movement happens in an
+:class:`~repro.mpc.executors.Executor` that interprets the ops.
+
+Op vocabulary (one op per logical engine phase; the simulator meters each as
+one named round, see docs/DESIGN.md §7):
+
+  ``Scatter``          even initial placement of the input relations
+  ``RouteResidual``    step 1 — residual tuples of every Q'(η) to its group
+  ``HashPartition``    step 2a — unary residuals hashed per border attribute,
+                       then the local intersection → R''_X(η)
+  ``SemiJoin``         step 2b/2c — light edges semi-joined on X then Y
+  ``BroadcastSizes``   step 3 — |R''_X(η)| pieces broadcast (the O(p²) round)
+  ``GridRoute``        step 3 — Lemma 3.1 CP grid × Lemma 3.3 HyperCube,
+                       composed via the Lemma 3.2 matrix; one round
+  ``LocalJoin``        output — local joins; each result tuple materializes on
+                       exactly one machine
+
+Program rewrites are passes over the op list: ``fuse_semijoin_pass`` replaces
+the two-round semi-join with the beyond-paper fused variant (one data round
+saved when a light edge's X attribute is not a border attribute).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.hypergraph import fractional_edge_cover
+from ..core.planner import (
+    ConfigPlan,
+    HPlanWithAlloc,
+    MachineGroup,
+    QueryPlan,
+    _stable_base,
+    step1_allocation,
+    step3_allocation,
+)
+from ..core.query import Attr, JoinQuery
+from ..core.taxonomy import (
+    Configuration,
+    HPlan,
+    HeavyStats,
+    config_feasible,
+    configurations,
+    plan_for_h,
+    residual_size,
+)
+from .cartesian import CartesianGrid
+from .hypercube import HyperCubeGrid
+
+
+# ---------------------------------------------------------------------------
+# Ops
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RoundOp:
+    """One logical phase of the constant-round algorithm."""
+
+    @property
+    def round(self) -> str:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class Scatter(RoundOp):
+    """Even initial placement of every input relation (Θ(m/p) per machine).
+    Costs no load in the MPC model; backends that already hold the inputs
+    (e.g. because the statistics preprocessing placed them) treat it as a
+    no-op."""
+
+    seed_offset: int = 17
+
+    @property
+    def round(self) -> str:
+        return "scatter"
+
+
+@dataclass(frozen=True)
+class RouteResidual(RoundOp):
+    """Step 1: every machine routes, per stage, the residual tuples of Q'(η)
+    to a uniformly random virtual machine of the stage's p'_η group."""
+
+    @property
+    def round(self) -> str:
+        return "step1"
+
+
+@dataclass(frozen=True)
+class HashPartition(RoundOp):
+    """Step 2a: unary residuals (from cross edges) are hash-partitioned per
+    border attribute; machines then intersect the co-located pieces into
+    R''_X(η) locally."""
+
+    @property
+    def round(self) -> str:
+        return "step2-unary"
+
+
+@dataclass(frozen=True)
+class SemiJoin(RoundOp):
+    """Step 2b/2c: semi-join of the light edges against the R''_X pieces.
+
+    ``phase`` selects the sub-round:
+      * ``"x"``            route by hash(X)                    (round step2-bx)
+      * ``"y"``            filter on X, route by hash(Y),
+                           then filter on Y locally            (round step2-by)
+      * ``"fused-route"``  fused variant: non-border-X edges go straight to
+                           their Y partition                   (round step2-fused)
+      * ``"fused-filter"`` border-X edges complete the detour  (round step2-by)
+    """
+
+    phase: str = "x"
+
+    @property
+    def round(self) -> str:
+        return {
+            "x": "step2-bx",
+            "y": "step2-by",
+            "fused-route": "step2-fused",
+            "fused-filter": "step2-by",
+        }[self.phase]
+
+
+@dataclass(frozen=True)
+class BroadcastSizes(RoundOp):
+    """Step 3 statistics: every machine broadcasts the sizes of its R''_X
+    pieces (the paper's O(p²) round); afterwards all machines agree on the
+    step-3 geometry (grid dims, HyperCube shares) of every stage."""
+
+    @property
+    def round(self) -> str:
+        return "step3-sizes"
+
+
+@dataclass(frozen=True)
+class GridRoute(RoundOp):
+    """Step 3 routing: the Lemma 3.1 cartesian grid over the isolated
+    R''_X lists composed with the Lemma 3.3 HyperCube over L \\ I, glued by
+    the Lemma 3.2 matrix — a single communication round."""
+
+    @property
+    def round(self) -> str:
+        return "step3-route"
+
+
+@dataclass(frozen=True)
+class LocalJoin(RoundOp):
+    """Output: each machine joins its fragments locally; every result tuple
+    of every stage materializes on exactly one machine (no communication)."""
+
+    @property
+    def round(self) -> str:
+        return "output"
+
+
+DEFAULT_OPS: Tuple[RoundOp, ...] = (
+    Scatter(),
+    RouteResidual(),
+    HashPartition(),
+    SemiJoin(phase="x"),
+    SemiJoin(phase="y"),
+    BroadcastSizes(),
+    GridRoute(),
+    LocalJoin(),
+)
+
+
+# ---------------------------------------------------------------------------
+# Stages + program
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ProgramStage:
+    """One (H, η) configuration with its machine allocation.
+
+    ``cfg`` carries the step-1 group at compile time; the step-3 geometry is
+    filled in at run time by :func:`stage_geometry` once the R''_X sizes are
+    known (they depend on the data, not the histogram)."""
+
+    plan: HPlan
+    cfg: ConfigPlan
+
+    @property
+    def hkey(self) -> Tuple[Attr, ...]:
+        return self.plan.h_set
+
+    @property
+    def ekey(self) -> Tuple[int, ...]:
+        return self.cfg.eta.values
+
+
+@dataclass
+class RoundProgram:
+    """A compiled Theorem 6.2 instance: stages + op sequence + emit tuples.
+
+    ``emit`` holds the H = attset(Q) results (η itself is the result tuple;
+    zero communication): (machine, row over ``out_cols``) pairs.
+    """
+
+    query: JoinQuery
+    p: int
+    lam: int
+    rho_val: float
+    stats: HeavyStats
+    stages: List[ProgramStage]
+    emit: List[Tuple[int, np.ndarray]]
+    emit_counts: Dict[Tuple[Attr, ...], int]
+    ops: Tuple[RoundOp, ...] = DEFAULT_OPS
+    fused: bool = False
+
+    @property
+    def out_cols(self) -> Tuple[Attr, ...]:
+        return tuple(self.query.attset)
+
+    @property
+    def round_names(self) -> List[str]:
+        return [op.round for op in self.ops]
+
+    def op_sequence(self) -> List[str]:
+        """Compact human/test-readable op listing, e.g. ['Scatter', ...]."""
+        out = []
+        for op in self.ops:
+            name = type(op).__name__
+            if isinstance(op, SemiJoin):
+                name += f"[{op.phase}]"
+            out.append(name)
+        return out
+
+    def query_plan(self) -> QueryPlan:
+        """Group the stages back into the planner's per-H view."""
+        h_plans: Dict[Tuple[Attr, ...], HPlanWithAlloc] = {}
+        for st in self.stages:
+            h_plans.setdefault(st.hkey, HPlanWithAlloc(plan=st.plan)).configs.append(
+                st.cfg
+            )
+        return QueryPlan(
+            p=self.p, lam=self.lam, rho_val=self.rho_val, h_plans=h_plans
+        )
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+
+def compile_plan(
+    query: JoinQuery,
+    stats: HeavyStats,
+    p: int,
+    h_subsets: Optional[Sequence[Sequence[Attr]]] = None,
+    fuse_semijoin: bool = False,
+) -> RoundProgram:
+    """Compile the full H-taxonomy of ``query`` into a :class:`RoundProgram`.
+
+    Absorbs all host-side planning of the engine: H enumeration, per-η
+    inactive-edge feasibility (from the extended histogram — ruled-out η cost
+    no communication), residual sizing, step-1 machine allocation, and the
+    H = attset(Q) emit set.  ``h_subsets`` restricts the taxonomy (testing).
+    """
+    attset = query.attset
+    k = len(attset)
+    rho_val = float(fractional_edge_cover(query.hypergraph)[0])
+
+    if h_subsets is None:
+        h_subsets = [
+            h for r in range(k + 1) for h in itertools.combinations(attset, r)
+        ]
+
+    stages: List[ProgramStage] = []
+    emit: List[Tuple[int, np.ndarray]] = []
+    emit_counts: Dict[Tuple[Attr, ...], int] = {}
+    out_cols = list(attset)
+
+    for h in h_subsets:
+        plan = plan_for_h(query, h)
+        cfg_sizes: List[Tuple[Configuration, int]] = []
+        for eta in configurations(stats, plan.h_set):
+            if not config_feasible(query, stats, plan, eta):
+                continue
+            if len(plan.h_set) == k:
+                # every edge inactive; η itself is the result tuple (no comm).
+                mid = _stable_base(p, "emit", plan.h_set, eta.values)
+                row = np.array([[eta.value(a) for a in out_cols]], dtype=np.int64)
+                emit.append((mid, row))
+                emit_counts[plan.h_set] = emit_counts.get(plan.h_set, 0) + 1
+                continue
+            m_eta = residual_size(query, stats, plan, eta)
+            if m_eta == 0 and (plan.light_edges or plan.cross_edges):
+                # some active edge has empty residual input ⇒ empty join.
+                continue
+            cfg_sizes.append((eta, m_eta))
+        for cfg in step1_allocation(query, stats, plan, cfg_sizes, p):
+            stages.append(ProgramStage(plan=plan, cfg=cfg))
+
+    program = RoundProgram(
+        query=query,
+        p=p,
+        lam=stats.lam,
+        rho_val=rho_val,
+        stats=stats,
+        stages=stages,
+        emit=emit,
+        emit_counts=emit_counts,
+        ops=DEFAULT_OPS,
+    )
+    if fuse_semijoin:
+        program = fuse_semijoin_pass(program)
+    return program
+
+
+def fuse_semijoin_pass(program: RoundProgram) -> RoundProgram:
+    """Program rewrite: replace SemiJoin[x] + SemiJoin[y] with the fused pair.
+
+    The fused route sends each light tuple whose X attribute is *not* a border
+    attribute straight to its Y partition (no X-membership to resolve), saving
+    one full data round for those edges; border-X edges keep the two-hop
+    detour.  Correctness is unchanged — the rewrite only reorders routing (see
+    EXPERIMENTS §Perf and tests/test_engine_fusion.py)."""
+    ops: List[RoundOp] = []
+    i = 0
+    seq = list(program.ops)
+    while i < len(seq):
+        op = seq[i]
+        if (
+            isinstance(op, SemiJoin)
+            and op.phase == "x"
+            and i + 1 < len(seq)
+            and isinstance(seq[i + 1], SemiJoin)
+            and seq[i + 1].phase == "y"
+        ):
+            ops.append(SemiJoin(phase="fused-route"))
+            ops.append(SemiJoin(phase="fused-filter"))
+            i += 2
+            continue
+        ops.append(op)
+        i += 1
+    return replace(program, ops=tuple(ops), fused=True)
+
+
+# ---------------------------------------------------------------------------
+# Run-time geometry (shared by all executors)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StageGeometry:
+    """Step-3 geometry of one stage, derived from the broadcast |R''_X| sizes.
+
+    Identical on every machine (a pure function of broadcast data), so any
+    backend may compute it host-side without extra communication.  It is
+    per-*run* state: the compiled program (and its ``ConfigPlan``s) is never
+    mutated, so one program can be executed concurrently by many executors."""
+
+    iso_order: List[Attr] = field(default_factory=list)  # isolated attrs, size desc
+    iso_sizes: Dict[Attr, int] = field(default_factory=dict)
+    offsets: Dict[Tuple[Attr, int], int] = field(default_factory=dict)
+    grid: Optional[CartesianGrid] = None
+    hc_grid: Optional[HyperCubeGrid] = None
+    step3_group: Optional[MachineGroup] = None
+    skip: bool = False
+
+
+def stage_geometry(
+    program: RoundProgram,
+    stage: ProgramStage,
+    piece_entries: Dict[Attr, List[Tuple[int, int]]],
+) -> StageGeometry:
+    """Finalize a stage's step-3 allocation from the broadcast piece sizes.
+
+    ``piece_entries[x]`` lists (machine, count) for attribute x's R''_X
+    pieces; ids are offset in sorted-machine order so every backend assigns
+    the same global ids.  Runs :func:`~repro.core.planner.step3_allocation`
+    on a *copy* of the stage's ``ConfigPlan`` (the shared program stays
+    immutable) and builds the CP / HyperCube grids of Lemma 6.1."""
+    geo = StageGeometry()
+    plan = stage.plan
+    for x in plan.isolated:
+        entries = sorted(piece_entries.get(x, []))
+        total = sum(c for _, c in entries)
+        geo.iso_sizes[x] = total
+        off = 0
+        for mid, c in entries:
+            geo.offsets[(x, mid)] = off
+            off += c
+    if any(v == 0 for v in geo.iso_sizes.values()):
+        geo.skip = True
+        return geo
+    cfg = replace(stage.cfg)
+    step3_allocation(
+        program.query,
+        program.stats,
+        plan,
+        cfg,
+        geo.iso_sizes,
+        program.p,
+        program.rho_val,
+    )
+    geo.step3_group = cfg.step3_group
+    geo.iso_order = sorted(plan.isolated, key=lambda a: -geo.iso_sizes[a])
+    if geo.iso_order:
+        geo.grid = CartesianGrid(
+            [geo.iso_sizes[a] for a in geo.iso_order], cfg.cp_machines
+        )
+    l_minus_i = [a for a in plan.light if a not in plan.isolated]
+    if l_minus_i:
+        geo.hc_grid = HyperCubeGrid(
+            l_minus_i, {a: program.stats.lam for a in l_minus_i}
+        )
+    return geo

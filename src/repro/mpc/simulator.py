@@ -25,9 +25,37 @@ Tag = Hashable
 _PRIME = (1 << 61) - 1  # Mersenne prime for 2-universal hashing
 
 
+def _mod_mersenne61(y: np.ndarray) -> np.ndarray:
+    """y mod (2^61 - 1) for uint64 y. Since 2^61 ≡ 1, fold the high bits down;
+    one fold leaves a value < 2^61 + 7, so a single conditional subtract finishes."""
+    r = (y >> np.uint64(61)) + (y & np.uint64(_PRIME))
+    return np.where(r >= np.uint64(_PRIME), r - np.uint64(_PRIME), r)
+
+
+def _mulmod_mersenne61(a: int, x: np.ndarray) -> np.ndarray:
+    """(a · x) mod (2^61 - 1), exact, vectorized. a < 2^61; x uint64 < 2^61.
+
+    Split both factors at 32 bits: a·x = ah·xh·2^64 + (ah·xl + al·xh)·2^32 + al·xl.
+    Every partial product fits uint64 (ah, xh < 2^29; al, xl < 2^32), and
+    2^64 ≡ 8, 2^32 shifts are folded via 2^61 ≡ 1."""
+    mask32 = np.uint64(0xFFFFFFFF)
+    ah, al = np.uint64(a >> 32), np.uint64(a & 0xFFFFFFFF)
+    xh, xl = x >> np.uint64(32), x & mask32
+    hi = _mod_mersenne61(ah * xh) * np.uint64(8)            # ·2^64 ≡ ·8  (< 2^64)
+    mid = _mod_mersenne61(ah * xl + al * xh)                 # < 2^61
+    # mid·2^32: split at bit 29 so the shifted halves stay below 2^61
+    mid = (mid >> np.uint64(29)) + ((mid & np.uint64((1 << 29) - 1)) << np.uint64(32))
+    lo = _mod_mersenne61(al * xl)
+    return _mod_mersenne61(_mod_mersenne61(hi) + _mod_mersenne61(mid) + lo)
+
+
 class HashFamily:
     """Shared 2-universal hash functions h_key(v) ∈ [0, range). Deterministic in
-    (seed, key): every machine evaluates identical functions without communication."""
+    (seed, key): every machine evaluates identical functions without communication.
+
+    Evaluation is exact modular arithmetic under the Mersenne prime 2^61 - 1,
+    vectorized in uint64 (no Python-int loop); tests/test_program_ir.py
+    cross-checks it against the scalar big-int reference."""
 
     def __init__(self, seed: int):
         self.seed = seed
@@ -41,10 +69,10 @@ class HashFamily:
     def hash(self, key: Hashable, values: np.ndarray, mod: int) -> np.ndarray:
         a, b = self._coeffs(key)
         values = np.asarray(values, dtype=np.int64)
-        uniq, inv = np.unique(values, return_inverse=True)  # exact big-int math on uniques
-        hashed = np.array(
-            [((a * int(x) + b) % _PRIME) % mod for x in uniq.tolist()], dtype=np.int64
-        )
+        uniq, inv = np.unique(values, return_inverse=True)
+        x = np.mod(uniq, _PRIME).astype(np.uint64)           # Python-mod semantics on negatives
+        hashed = _mod_mersenne61(_mulmod_mersenne61(a, x) + np.uint64(b))
+        hashed = (hashed % np.uint64(mod)).astype(np.int64)
         return hashed[inv].reshape(values.shape)
 
 

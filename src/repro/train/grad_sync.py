@@ -25,13 +25,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
-def _hier_one(g: jax.Array) -> jax.Array:
+def _hier_one(g: jax.Array, data_size: int) -> jax.Array:
     """Inside shard_map: g is the device-local gradient block (already summed over
-    model-parallel partial terms by GSPMD before entry)."""
+    model-parallel partial terms by GSPMD before entry). ``data_size`` is the
+    static "data" axis extent (shapes below depend on it, so it must be a
+    Python int, not a collective result)."""
     # flatten so the scatter axis always divides
     flat = g.reshape(-1)
     n = flat.shape[0]
-    data_size = jax.lax.axis_size("data")
     pad = (-n) % data_size
     if pad:
         flat = jnp.pad(flat, (0, pad))
@@ -54,9 +55,10 @@ def hierarchical_mean(grads: Any, mesh, replicated_specs) -> Any:
     from jax.experimental.shard_map import shard_map
 
     n_rep = mesh.shape["pod"] * mesh.shape["data"]
+    data_size = mesh.shape["data"]
 
     def body(g):
-        return jax.tree.map(lambda x: _hier_one(x) / n_rep, g)
+        return jax.tree.map(lambda x: _hier_one(x, data_size) / n_rep, g)
 
     fn = shard_map(
         body, mesh=mesh,

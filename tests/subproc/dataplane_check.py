@@ -10,23 +10,31 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 
-from repro.core.query import JoinQuery, Relation, reference_join  # noqa: E402
+from repro.core.query import (  # noqa: E402
+    JoinQuery,
+    Relation,
+    hub_triangle_query,
+    reference_join,
+)
+from repro.core.taxonomy import compute_stats  # noqa: E402
 from repro.dataplane.decode_attn import (  # noqa: E402
     reference_decode_attention,
     split_kv_decode_attention,
 )
+from repro.dataplane.exchange import blockify  # noqa: E402
 from repro.dataplane.join import hypercube_binary_join  # noqa: E402
+from repro.mpc.executors import DataplaneExecutor, SimulatorExecutor  # noqa: E402
+from repro.mpc.program import compile_plan  # noqa: E402
 from repro.train.grad_sync import hierarchical_mean  # noqa: E402
 from repro.train.pipeline import pipelined_forward  # noqa: E402
 
 
 def _mesh(shape, names):
-    kinds = (jax.sharding.AxisType.Auto,) * len(names)
-    return jax.make_mesh(shape, names, axis_types=kinds)
+    return jax.make_mesh(shape, names)
 
 
 def check_join():
@@ -39,27 +47,13 @@ def check_join():
     a = np.unique(a, axis=0)
     b = np.unique(b, axis=0)
 
-    # pad to per-device blocks
-    def blockify(rows):
-        per = -(-rows.shape[0] // p)
-        out = np.zeros((p, cap, 2), np.int32)
-        counts = np.zeros((p,), np.int32)
-        for i in range(p):
-            part = rows[i * per : (i + 1) * per]
-            out[i, : len(part)] = part
-            counts[i] = len(part)
-        return jnp.asarray(out), jnp.asarray(counts)
-
-    a_g, a_c = blockify(a)
-    b_g, b_c = blockify(b)
+    a_g, a_c = blockify(a, p, cap)
+    b_g, b_c = blockify(b, p, cap)
     mesh = _mesh((p,), ("m",))
-    with jax.sharding.set_mesh(mesh):
-        out, cnt, ovf = jax.jit(
-            lambda ag, ac, bg, bc: hypercube_binary_join(
-                mesh, "m", ag, ac, bg, bc, ka=1, kb=0,
-                cap_slot=cap, cap_mid=2 * cap, cap_out=4096,
-            )
-        )(a_g, a_c, b_g, b_c)
+    out, cnt, ovf = hypercube_binary_join(
+        mesh, "m", a_g, a_c, b_g, b_c, ka=1, kb=0,
+        cap_slot=cap, cap_mid=2 * cap, cap_out=4096,
+    )
     assert int(jnp.sum(ovf)) == 0, "overflow in padded exchange"
     got = set()
     out_np, cnt_np = np.asarray(out), np.asarray(cnt)
@@ -77,6 +71,54 @@ def check_join():
     print(f"[ok] distributed join: {len(got)} tuples match oracle")
 
 
+def check_program_binary_join():
+    """Acceptance: DataplaneExecutor on the compiled binary-join program matches
+    the oracle multiset on 8 fake host devices."""
+    rng = np.random.default_rng(0)
+    a = np.unique(rng.integers(0, 60, size=(1200, 2)), axis=0)
+    b = np.unique(rng.integers(0, 60, size=(1500, 2)), axis=0)
+    q = JoinQuery.make(
+        [Relation.make(("A", "B"), a), Relation.make(("B", "C"), b)]
+    )
+    stats = compute_stats(q, lam=2)  # threshold m/2 ⇒ no heavy values ⇒ one H=∅ stage
+    program = compile_plan(q, stats, p=8)
+    assert [type(op).__name__ for op in program.ops][0] == "Scatter"
+    res = DataplaneExecutor().run(program)
+    oracle = reference_join(q)
+    got = sorted(map(tuple, res.rows.tolist()))
+    want = sorted(map(tuple, oracle.data.tolist()))
+    assert res.count == len(oracle) and got == want, (res.count, len(oracle))
+    print(f"[ok] dataplane executor, binary-join program: {res.count} tuples match oracle")
+
+
+def check_program_light_subquery():
+    """Acceptance: a light-subquery program — triangle with a planted heavy hub.
+    The H={X0} stage exercises the HashPartition (unary intersect) and SemiJoin
+    lowerings; the H=∅ stage is a cyclic light join (duplicate-attr filter).
+    The same program also runs on the simulator backend; both must agree with
+    the oracle (and each other) on the result multiset."""
+    q = hub_triangle_query(n=150, hub_n=60, dom_size=30)
+    stats = compute_stats(q, lam=12)
+    assert stats.heavy.get("X0") is not None, "hub must be heavy for this check"
+    program = compile_plan(q, stats, p=8)
+    assert any(st.hkey == ("X0",) for st in program.stages), "need an H={X0} stage"
+
+    res = DataplaneExecutor().run(program)
+    oracle = reference_join(q)
+    got = sorted(map(tuple, res.rows.tolist()))
+    want = sorted(map(tuple, oracle.data.tolist()))
+    assert res.count == len(oracle) and got == want, (res.count, len(oracle))
+
+    sim_res = SimulatorExecutor(p=8).run(program)
+    assert sim_res.count == res.count
+    assert sorted(map(tuple, sim_res.rows.tolist())) == got
+    assert sim_res.per_h_counts == res.per_h_counts
+    print(
+        f"[ok] dataplane executor, light-subquery program: {res.count} tuples, "
+        f"per-H {res.per_h_counts} match oracle + simulator backend"
+    )
+
+
 def check_decode_attn():
     rng = np.random.default_rng(1)
     b, h, kv, hd, s = 2, 8, 4, 16, 64
@@ -84,8 +126,7 @@ def check_decode_attn():
     k = jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32))
     v = jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32))
     mesh = _mesh((8,), ("model",))
-    with jax.sharding.set_mesh(mesh):
-        out = jax.jit(lambda q, k, v: split_kv_decode_attention(mesh, "model", q, k, v))(q, k, v)
+    out = jax.jit(lambda q, k, v: split_kv_decode_attention(mesh, "model", q, k, v))(q, k, v)
     ref = reference_decode_attention(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
     print("[ok] split-KV decode attention matches reference")
@@ -97,8 +138,7 @@ def check_hierarchical_grad_sync():
     g = {"w": jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32)),
          "b": jnp.asarray(rng.normal(size=(5,)).astype(np.float32))}
     specs = {"w": P(), "b": P()}
-    with jax.sharding.set_mesh(mesh):
-        out = jax.jit(lambda g: hierarchical_mean(g, mesh, specs))(g)
+    out = jax.jit(lambda g: hierarchical_mean(g, mesh, specs))(g)
     # replicated input ⇒ mean over 4 identical replicas = identity
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(out["b"]), np.asarray(g["b"]), rtol=1e-6)
@@ -115,10 +155,9 @@ def check_pipeline():
     def stage_fn(xm, sp):
         return jnp.tanh(xm @ sp[0])
 
-    with jax.sharding.set_mesh(mesh):
-        out = jax.jit(
-            lambda x, w: pipelined_forward(mesh, "stage", n_stages, n_micro, stage_fn, x, w)
-        )(x, w)
+    out = jax.jit(
+        lambda x, w: pipelined_forward(mesh, "stage", n_stages, n_micro, stage_fn, x, w)
+    )(x, w)
     ref = x
     for sidx in range(n_stages):
         ref = jnp.tanh(ref @ w[sidx, 0])
@@ -128,6 +167,8 @@ def check_pipeline():
 
 if __name__ == "__main__":
     check_join()
+    check_program_binary_join()
+    check_program_light_subquery()
     check_decode_attn()
     check_hierarchical_grad_sync()
     check_pipeline()

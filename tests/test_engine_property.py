@@ -3,6 +3,9 @@ random queries/data; the isolated cartesian product theorem holds empirically; t
 heavy/light taxonomy (4.2) is a *disjoint* partition of the join result."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.icp import all_icp_checks

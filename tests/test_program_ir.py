@@ -1,0 +1,241 @@
+"""Round-program IR: compilation structure, executor equivalence, hash exactness.
+
+The golden numbers in `GOLDEN` were recorded by running the pre-refactor
+monolithic engine (commit e4d9f4e) on these exact seeded inputs; the
+SimulatorExecutor interpreting the compiled program must reproduce them
+byte-for-byte — join count, per-H counts, and parallel total load, fused and
+unfused."""
+
+import numpy as np
+import pytest
+
+from repro.core.query import (
+    JoinQuery,
+    Relation,
+    hub_triangle_query,
+    random_query,
+    reference_join,
+)
+from repro.core.taxonomy import compute_stats
+from repro.mpc.engine import mpc_join
+from repro.mpc.program import compile_plan, fuse_semijoin_pass
+from repro.mpc.executors import SimulatorExecutor
+from repro.mpc.simulator import HashFamily, _PRIME
+
+
+# ---------------------------------------------------------------------------
+# Compilation structure
+# ---------------------------------------------------------------------------
+
+BASE_SEQUENCE = [
+    "Scatter",
+    "RouteResidual",
+    "HashPartition",
+    "SemiJoin[x]",
+    "SemiJoin[y]",
+    "BroadcastSizes",
+    "GridRoute",
+    "LocalJoin",
+]
+
+FUSED_SEQUENCE = [
+    "Scatter",
+    "RouteResidual",
+    "HashPartition",
+    "SemiJoin[fused-route]",
+    "SemiJoin[fused-filter]",
+    "BroadcastSizes",
+    "GridRoute",
+    "LocalJoin",
+]
+
+
+def _hub_triangle():
+    """Triangle with one planted heavy hub value on X0 only."""
+    return hub_triangle_query(n=150, hub_n=60, dom_size=30)
+
+
+def _hub_star():
+    """Star X0–X1, X0–X2, X0–X3 with a heavy hub: removing the hub leaves the
+    leaves isolated (the Lemma 3.1 CP machinery)."""
+    rng = np.random.default_rng(2)
+    n, hub = 120, 777
+    rels = []
+    for leaf in ("X1", "X2", "X3"):
+        planted = np.stack([np.full(50, hub), np.arange(50) + 100], 1)
+        noise = rng.integers(0, 25, size=(n, 2))
+        rels.append(Relation.make(("X0", leaf), np.concatenate([planted, noise])))
+    return JoinQuery.make(rels)
+
+
+def test_triangle_program_structure():
+    q = _hub_triangle()
+    stats = compute_stats(q, lam=12)
+    assert "X0" in stats.heavy and len(stats.heavy) == 1
+    program = compile_plan(q, stats, p=8)
+    assert program.op_sequence() == BASE_SEQUENCE
+
+    by_h = {}
+    for st in program.stages:
+        by_h.setdefault(st.hkey, []).append(st)
+    # only X0 has heavy values ⇒ exactly H=∅ and H={X0} produce stages
+    assert set(by_h) == {(), ("X0",)}
+    (empty_stage,) = by_h[()]
+    assert empty_stage.plan.light_edges == tuple(
+        sorted([r.edge for r in q.relations], key=sorted)
+    )
+    (hub_stage,) = by_h[("X0",)]
+    assert hub_stage.ekey == (999,)
+    assert hub_stage.plan.border == ("X1", "X2")
+    assert len(hub_stage.plan.cross_edges) == 2
+    assert len(hub_stage.plan.light_edges) == 1
+    assert hub_stage.plan.isolated == ()
+    assert hub_stage.cfg.step1_group.size >= 1
+
+
+def test_star_program_structure():
+    q = _hub_star()
+    stats = compute_stats(q, lam=10)
+    assert "X0" in stats.heavy
+    program = compile_plan(q, stats, p=8)
+    assert program.op_sequence() == BASE_SEQUENCE
+
+    hub_stages = [st for st in program.stages if st.hkey == ("X0",)]
+    assert hub_stages, "heavy hub must produce an H={X0} stage"
+    for st in hub_stages:
+        # all leaves become isolated: no light edges survive under the hub
+        assert st.plan.isolated == ("X1", "X2", "X3")
+        assert st.plan.light_edges == ()
+        assert len(st.plan.cross_edges) == 3
+    # the planner view groups stages back per H
+    qp = program.query_plan()
+    assert set(qp.h_plans) == {st.hkey for st in program.stages}
+
+
+def test_fuse_semijoin_is_a_program_rewrite():
+    q = _hub_triangle()
+    stats = compute_stats(q, lam=12)
+    plain = compile_plan(q, stats, p=8)
+    fused = fuse_semijoin_pass(plain)
+    assert plain.op_sequence() == BASE_SEQUENCE
+    assert fused.op_sequence() == FUSED_SEQUENCE
+    assert fused.fused and not plain.fused
+    # stages are shared, not recomputed
+    assert fused.stages is plain.stages
+    assert compile_plan(q, stats, p=8, fuse_semijoin=True).op_sequence() == FUSED_SEQUENCE
+
+
+def test_emit_only_configurations_compile_to_emits():
+    """H = attset(Q): η itself is the result tuple, compiled to host-side emits."""
+    n = 80
+    hub = np.zeros(n, dtype=np.int64)
+    q = JoinQuery.make(
+        [Relation.make(("H", "A"), np.stack([hub, np.arange(n)], 1)),
+         Relation.make(("H", "B"), np.stack([hub, np.arange(n) + 1000], 1))]
+    )
+    # make one (h, a, b) combination fully heavy
+    stats = compute_stats(q, lam=2 * n)   # threshold 1: everything is heavy
+    program = compile_plan(q, stats, p=4)
+    k = len(q.attset)
+    assert all(len(h) < k for h in (st.hkey for st in program.stages))
+    assert sum(program.emit_counts.values()) == len(program.emit)
+    assert len(program.emit) == len(reference_join(q))   # all pairs heavy-heavy
+
+
+# ---------------------------------------------------------------------------
+# Executor equivalence vs the pre-refactor engine (golden values)
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    # name: (kind, n_attrs, rng_seed, tuples, dom, skew, p, lam,
+    #        count, load_plain, load_fused)
+    "triangle": ("clique", 3, 2, 300, 30, 2.0, 8, 16, 116, 3013, 2929),
+    "star": ("star", 4, 4, 150, 12, 1.5, 8, 3, 1934, 1649, 1371),
+    "cycle": ("cycle", 4, 3, 200, 20, 1.0, 16, 3, 2469, 2824, 2328),
+}
+
+GOLDEN_TRIANGLE_PER_H = {
+    (): 19,
+    ("X0",): 11,
+    ("X0", "X1"): 7,
+    ("X0", "X1", "X2"): 2,
+    ("X0", "X2"): 19,
+    ("X1",): 16,
+    ("X1", "X2"): 17,
+    ("X2",): 25,
+}
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_simulator_executor_matches_pre_refactor_engine(name):
+    kind, n_attrs, seed, n, dom, skew, p, lam, count, load_plain, load_fused = GOLDEN[name]
+    q = random_query(
+        np.random.default_rng(seed), kind, n_attrs,
+        tuples_per_rel=n, dom_size=dom, skew=skew,
+    )
+    res = mpc_join(q, p=p, lam=lam, materialize=True)
+    assert res.count == count == len(reference_join(q))
+    assert res.sim.parallel_total_load == load_plain
+    fused = mpc_join(q, p=p, lam=lam, materialize=True, fuse_semijoin=True)
+    assert fused.count == count
+    assert fused.sim.parallel_total_load == load_fused
+    assert fused.per_h_counts == res.per_h_counts
+    if name == "triangle":
+        assert res.per_h_counts == GOLDEN_TRIANGLE_PER_H
+
+
+def test_one_program_runs_on_a_fresh_simulator():
+    """The program is a reusable artifact: compile once, execute on a bare
+    simulator (no statistics rounds metered) — results identical, load ledger
+    contains exactly the program's rounds."""
+    q = _hub_triangle()
+    stats = compute_stats(q, lam=12)
+    program = compile_plan(q, stats, p=8)
+    res = SimulatorExecutor(p=8).run(program)
+    assert res.count == len(reference_join(q))
+    names = [n for n, _ in res.sim.load_report()]
+    assert names == [op.round for op in program.ops if op.round not in ("scatter", "output")]
+    # same program again, different executor seed: same result, different routes
+    res2 = SimulatorExecutor(p=8, seed=5).run(program)
+    assert res2.count == res.count
+    assert sorted(map(tuple, res2.rows.tolist())) == sorted(map(tuple, res.rows.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized HashFamily vs the scalar big-int reference
+# ---------------------------------------------------------------------------
+
+
+def test_hash_family_matches_bigint_loop():
+    hf = HashFamily(seed=7)
+    rng = np.random.default_rng(0)
+    vals = np.concatenate(
+        [
+            rng.integers(-(2**62), 2**62, size=2000),
+            np.array(
+                [0, -1, 1, _PRIME, _PRIME - 1, _PRIME + 1, 2**63 - 1, -(2**63)],
+                dtype=np.int64,
+            ),
+        ]
+    )
+    for key in [("a",), (("X0",), (999,), "sj", "X1"), 42]:
+        a, b = hf._coeffs(key)
+        for mod in [1, 2, 7, 97, 1 << 20]:
+            ref = np.array(
+                [((a * int(x) + b) % _PRIME) % mod for x in vals.tolist()],
+                dtype=np.int64,
+            )
+            got = hf.hash(key, vals, mod)
+            assert np.array_equal(ref, got), (key, mod)
+
+
+def test_hash_family_deterministic_across_instances():
+    """Shared randomness (paper footnote 2): two machines with the same seed
+    evaluate identical functions."""
+    v = np.arange(1000, dtype=np.int64) * 7919
+    assert np.array_equal(
+        HashFamily(seed=3).hash("k", v, 64), HashFamily(seed=3).hash("k", v, 64)
+    )
+    assert not np.array_equal(
+        HashFamily(seed=3).hash("k", v, 64), HashFamily(seed=4).hash("k", v, 64)
+    )
