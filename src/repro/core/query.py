@@ -248,3 +248,40 @@ def hub_triangle_query(
             Relation.make(("X1", "X2"), r12),
         ]
     )
+
+
+def hub_star_query(
+    n: int,
+    hub_n: int,
+    dom_size: int,
+    hub: int = 777,
+    seed: int = 2,
+    leaves: Sequence[Attr] = ("X1", "X2", "X3"),
+) -> JoinQuery:
+    """Star with a planted heavy hub on the center X0: ``hub_n`` tuples with
+    distinct partners per leaf edge plus ``n`` uniform tuples.  With λ chosen
+    so the hub is heavy, the H={X0} stage has *every* leaf isolated and no
+    surviving light edges — the pure Lemma 3.1 CP-grid exercise shared by the
+    parity tests, the multi-device checks, and the backend benchmark."""
+    rng = np.random.default_rng(seed)
+    rels = []
+    for leaf in leaves:
+        planted = np.stack([np.full(hub_n, hub), np.arange(hub_n) + 100], axis=1)
+        noise = rng.integers(0, dom_size, size=(n, 2))
+        rels.append(Relation.make(("X0", leaf), np.concatenate([planted, noise])))
+    return JoinQuery.make(rels)
+
+
+def disconnected_query(
+    n: int, dom_size: int, skew: float = 0.0, seed: int = 11
+) -> JoinQuery:
+    """Two components (A,B) ⋈ (C,D): the H=∅ light subquery is disconnected
+    (an in-cell cartesian across HyperCube components); with skew > 0 heavy
+    values add stages mixing an isolated attribute with a light component."""
+    rng = np.random.default_rng(seed)
+    return JoinQuery.make(
+        [
+            zipf_relation(rng, ("A", "B"), n, dom_size, skew),
+            zipf_relation(rng, ("C", "D"), n, dom_size, skew),
+        ]
+    )

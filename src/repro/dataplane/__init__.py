@@ -6,13 +6,21 @@ paper's own w.h.p. load bounds, with overflow surfaced as a counter. Validated
 bit-for-bit against the exact-cost simulator in tests/test_dataplane_subprocess.py.
 """
 
-from .exchange import PaddedShard, blockify, hash_exchange, unblockify
+from .exchange import PaddedShard, blockify, exchange_by_partition, hash_exchange, unblockify
+from .grid import (
+    CPRouteSpec,
+    HCRouteSpec,
+    cp_route_spec,
+    hc_route_spec,
+    sharded_grid_route,
+)
 from .join import (
     hypercube_binary_join,
     local_join_filtered,
     local_semijoin,
     local_sorted_join,
     local_unique,
+    sharded_colocated_join,
     sharded_intersect,
     sharded_join_step,
     sharded_semijoin,

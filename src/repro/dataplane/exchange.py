@@ -8,9 +8,15 @@ Each device holds `rows (cap_in, w)` with the first `count` rows valid. The exch
   4. receive (P, cap_slot, w) + per-source counts; compact back to (cap_out, w).
 
 Capacity: the paper guarantees Õ(m/p) received rows w.h.p. for its routing steps, so
-cap_slot = c·ceil(cap_in/P) with slack c. Overflow (a destination slot exceeding
-capacity) is *detected and returned*, never silently dropped — the engine's retry
-doubles capacity, replacing the paper's 1/p^c failure probability."""
+cap_slot = c·ceil(cap_in/P) with slack c. Overflow is *detected and returned*, never
+silently dropped — the engine's retry doubles capacity, replacing the paper's 1/p^c
+failure probability. Overflow is reported on two separate channels so the retry can
+scale only the buffer that actually overflowed:
+
+  * *slot* overflow — a destination's send slot exceeded ``cap_slot`` (routing
+    imbalance; fixed by bigger routing buffers and/or fresh routing randomness);
+  * *out* overflow — the compacted receive side exceeded ``cap_out`` (the output
+    estimate was too small; fixed by a bigger output buffer alone)."""
 
 from __future__ import annotations
 
@@ -122,6 +128,26 @@ def salt_offset(salt: int) -> int:
     return salt * 2654435761 % (2**31)
 
 
+def exchange_by_partition(
+    rows: jax.Array,
+    count: jax.Array,
+    part: jax.Array,
+    axis_name: str,
+    n_parts: int,
+    cap_slot: int,
+    cap_out: int,
+):
+    """Inside shard_map: route rows to explicit destinations `part` (cap,) over
+    `axis_name`.  Returns (rows_out (cap_out, w), count_out, ovf_slot, ovf_out)."""
+    send, send_counts, ovf_slot = pack_by_partition(rows, count, part, n_parts, cap_slot)
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=False)
+    recv_counts = jax.lax.all_to_all(
+        send_counts.reshape(n_parts, 1), axis_name, split_axis=0, concat_axis=0, tiled=False
+    ).reshape(n_parts)
+    out, count_out, ovf_out = compact(recv, recv_counts, cap_out)
+    return out, count_out, ovf_slot, ovf_out
+
+
 def hash_exchange(
     rows: jax.Array,
     count: jax.Array,
@@ -133,7 +159,7 @@ def hash_exchange(
     salt=0,
 ):
     """Inside shard_map: route rows by hash(key) over `axis_name`.
-    Returns (rows_out (cap_out, w), count_out, overflow).
+    Returns (rows_out (cap_out, w), count_out, ovf_slot, ovf_out).
 
     ``salt`` is either a Python int (mixed via `salt_offset` at trace time) or
     a traced int32 scalar already holding the offset."""
@@ -143,10 +169,4 @@ def hash_exchange(
         off = salt.astype(jnp.int32)
     keys = rows[:, key_col].astype(jnp.int32) + off
     part, _ = hash_partition(keys, n_parts)
-    send, send_counts, ovf1 = pack_by_partition(rows, count, part, n_parts, cap_slot)
-    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=False)
-    recv_counts = jax.lax.all_to_all(
-        send_counts.reshape(n_parts, 1), axis_name, split_axis=0, concat_axis=0, tiled=False
-    ).reshape(n_parts)
-    out, count_out, ovf2 = compact(recv, recv_counts, cap_out)
-    return out, count_out, ovf1 + ovf2
+    return exchange_by_partition(rows, count, part, axis_name, n_parts, cap_slot, cap_out)

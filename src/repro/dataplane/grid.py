@@ -1,0 +1,242 @@
+"""Step-3 grid routing on the device mesh (the GridRoute op's dataplane lowering).
+
+The Lemma 3.1 cartesian grid over the isolated R''_X lists is composed with
+the Lemma 3.3 HyperCube over L \\ I via the Lemma 3.2 matrix: virtual machine
+``v = cp_cell * hc_size + hc_cell``.  `sharded_grid_route` realizes both sides
+of that composition with one primitive: every row is *replicated* to its set
+of destination virtual cells (a static per-fragment fan-out), tagged with the
+cell id in a new leading column, and exchanged with the same capacity-padded
+``all_to_all`` the hash exchange uses — virtual cell ``v`` lives on device
+``v % p``.  Afterwards all fragments of a cell are co-located, so the LocalJoin
+op lowers to communication-free `sharded_colocated_join` steps keyed on the
+cell column.
+
+Destination sets come from the *same* geometry the simulator uses:
+
+  * isolated pieces — global tuple ids ``offset(device) + arange(count)``
+    (offsets derived from the BroadcastSizes piece counts in sorted-device
+    order, see ``stage_geometry``), mapped through
+    ``CartesianGrid.cells_for_ids`` (lists beyond t' are broadcast to every
+    CP cell), then replicated across every HyperCube column;
+  * light-edge residents — per-attribute salted coordinate hashes mapped
+    through ``HyperCubeGrid.cells_for`` (free dims enumerated), then
+    replicated across every CP row.
+
+Both sides share the static cell-contribution helpers (`cp_cell_contribs`,
+`hc_cell_contribs`) with the grids' numpy/jnp coordinate methods, so the
+dataplane and the simulator enumerate identical cells by construction.
+
+Overflow contract matches repro.dataplane.join: ``ovf`` is (p, 2) with
+column 0 = send-slot overflow, column 1 = output overflow.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..mpc.cartesian import CartesianGrid, cp_cells_dev
+from ..mpc.hypercube import HyperCubeGrid, hc_cell_contribs, hc_cells_dev
+from .exchange import exchange_by_partition
+
+
+# ---------------------------------------------------------------------------
+# Route specs (static, hashable — they key the jit/shard_map cache)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CPRouteSpec:
+    """Destination rule for one isolated R''_X list (Lemma 3.1 side)."""
+
+    dims: Tuple[int, ...]       # CP grid dimensions (size-desc list order)
+    list_idx: int               # this list's position in the size-desc order
+    t_prime: int                # lists ≥ t' are broadcast to every CP cell
+    hc_size: int                # HyperCube columns to replicate across
+
+    @property
+    def fanout(self) -> int:
+        cp_size = math.prod(self.dims) if self.dims else 1
+        if self.list_idx < self.t_prime:
+            n_other = cp_size // self.dims[self.list_idx]
+        else:
+            n_other = cp_size
+        return n_other * self.hc_size
+
+
+@dataclass(frozen=True)
+class HCRouteSpec:
+    """Destination rule for one light-edge fragment (Lemma 3.3 side)."""
+
+    fixed: Tuple[Tuple[int, int, int], ...]   # (column, share, flat stride)
+    free_contribs: Tuple[int, ...]            # flat ids of the free-dim combos
+    cp_size: int                              # CP rows to replicate across
+    hc_size: int
+
+    @property
+    def fanout(self) -> int:
+        return len(self.free_contribs) * self.cp_size
+
+
+def cp_route_spec(grid: CartesianGrid, list_idx: int, hc_size: int) -> CPRouteSpec:
+    return CPRouteSpec(
+        dims=tuple(grid.dims), list_idx=list_idx, t_prime=grid.t_prime,
+        hc_size=hc_size,
+    )
+
+
+def hc_route_spec(
+    grid: HyperCubeGrid, scheme: Sequence[str], cp_size: int
+) -> HCRouteSpec:
+    """Spec for a fragment over ``scheme``: every scheme attribute present in
+    the grid becomes a hashed (fixed) coordinate, the rest enumerate."""
+    fixed_attrs = [a for a in scheme if a in grid.attrs]
+    strides, contribs = hc_cell_contribs(grid.attrs, grid.dims, fixed_attrs)
+    fixed = tuple(
+        (list(scheme).index(a), grid.share(a), strides[a]) for a in fixed_attrs
+    )
+    return HCRouteSpec(
+        fixed=fixed, free_contribs=contribs, cp_size=cp_size, hc_size=grid.size
+    )
+
+
+# ---------------------------------------------------------------------------
+# Device-side pieces
+# ---------------------------------------------------------------------------
+
+
+def coord_hash(vals: jax.Array, salt: jax.Array) -> jax.Array:
+    """Per-attribute coordinate hash: uint32 avalanche mix of (value, salt).
+    Every device evaluates the same function (shared randomness, paper
+    footnote 2); the salt is traced so a retry's fresh randomness does not
+    retrace the executable."""
+    h = vals.astype(jnp.uint32) * jnp.uint32(2654435761) + salt.astype(jnp.uint32)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(2246822519)
+    h = h ^ (h >> 13)
+    return h
+
+
+def replicate_to_cells(
+    rows: jax.Array,        # (cap, w) valid-prefix padded
+    count: jax.Array,       # scalar
+    dests: jax.Array,       # (cap, R) destination virtual cells per row
+    axis_name: str,
+    p: int,
+    cap_slot: int,
+    cap_out: int,
+):
+    """Inside shard_map: send one copy of each row to every destination cell,
+    tagged with the cell id in a new leading column; cell v → device v % p.
+    Returns (out (cap_out, 1+w), count, ovf_slot, ovf_out)."""
+    cap, w = rows.shape
+    fanout = dests.shape[1]
+    rep = jnp.repeat(rows, fanout, axis=0)              # keeps prefix validity
+    v = dests.reshape(-1).astype(jnp.int32)
+    tagged = jnp.concatenate([v[:, None], rep], axis=1)
+    return exchange_by_partition(
+        tagged, count * fanout, v % p, axis_name, p, cap_slot, cap_out
+    )
+
+
+@lru_cache(maxsize=512)
+def _cp_route_fn(mesh, axis_name, spec: CPRouteSpec, cap_slot, cap_out):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+    cp_size = math.prod(spec.dims) if spec.dims else 1
+
+    def body(rows, cnts, offs):
+        rows, cnt, off = rows[0], cnts[0], offs[0]
+        cap = rows.shape[0]
+        ids = off.astype(jnp.int32) + jnp.arange(cap, dtype=jnp.int32)
+        if spec.list_idx < spec.t_prime:
+            cells = cp_cells_dev(ids, spec.dims, spec.list_idx)
+        else:   # too small to matter: broadcast to every CP cell (Lemma 3.1)
+            cells = jnp.broadcast_to(
+                jnp.arange(cp_size, dtype=jnp.int32)[None, :], (cap, cp_size)
+            )
+        dests = (
+            cells[:, :, None] * spec.hc_size
+            + jnp.arange(spec.hc_size, dtype=jnp.int32)[None, None, :]
+        ).reshape(cap, -1)
+        out, c, o_s, o_o = replicate_to_cells(
+            rows, cnt, dests, axis_name, p, cap_slot, cap_out
+        )
+        return out[None], c[None], jnp.stack([o_s, o_o]).astype(jnp.int32)[None]
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name, None, None), P(axis_name), P(axis_name)),
+        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None)),
+        check_rep=False,
+    ))
+
+
+@lru_cache(maxsize=512)
+def _hc_route_fn(mesh, axis_name, spec: HCRouteSpec, cap_slot, cap_out):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(rows, cnts, salts):
+        rows, cnt = rows[0], cnts[0]
+        cap = rows.shape[0]
+        coords = [
+            (coord_hash(rows[:, col], salts[i]) % jnp.uint32(share), stride)
+            for i, (col, share, stride) in enumerate(spec.fixed)
+        ]
+        cells = hc_cells_dev(coords, spec.free_contribs, cap)
+        dests = (
+            jnp.arange(spec.cp_size, dtype=jnp.int32)[None, :, None] * spec.hc_size
+            + cells[:, None, :]
+        ).reshape(cap, -1)
+        out, c, o_s, o_o = replicate_to_cells(
+            rows, cnt, dests, axis_name, p, cap_slot, cap_out
+        )
+        return out[None], c[None], jnp.stack([o_s, o_o]).astype(jnp.int32)[None]
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name, None, None), P(axis_name), P(None)),
+        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None)),
+        check_rep=False,
+    ))
+
+
+def sharded_grid_route(
+    mesh,
+    axis_name: str,
+    rows: jax.Array,            # (p, cap, w) device-sharded padded blocks
+    counts: jax.Array,          # (p,)
+    spec,                       # CPRouteSpec | HCRouteSpec
+    *,
+    offsets: Optional[jax.Array] = None,    # (p,) global-id bases (CP side)
+    salts: Optional[Sequence[int]] = None,  # per-fixed-attr salts (HC side)
+    cap_slot: int,
+    cap_out: int,
+):
+    """Route one fragment to its step-3 virtual grid cells (GridRoute lowering).
+
+    Returns (out (p, cap_out, 1+w), counts (p,), ovf (p, 2)); column 0 of every
+    output row is the destination cell id (the Lemma 3.2 virtual machine),
+    columns 1.. are the original row."""
+    if isinstance(spec, CPRouteSpec):
+        if offsets is None:
+            raise ValueError("CP-side grid route needs per-device id offsets")
+        fn = _cp_route_fn(mesh, axis_name, spec, cap_slot, cap_out)
+        return fn(rows, counts, jnp.asarray(offsets, dtype=jnp.int32))
+    if isinstance(spec, HCRouteSpec):
+        if salts is None:
+            raise ValueError("HC-side grid route needs per-attribute salts")
+        fn = _hc_route_fn(mesh, axis_name, spec, cap_slot, cap_out)
+        return fn(rows, counts, jnp.asarray(list(salts), dtype=jnp.uint32))
+    raise TypeError(f"unknown grid-route spec {spec!r}")

@@ -2,11 +2,18 @@
 
 The local primitives (`local_sorted_join`, `local_semijoin`, `local_unique`)
 all run on the merge_join_counts Pallas probe with static shapes; the sharded
-primitives (`sharded_join_step`, `sharded_semijoin`, `sharded_intersect`)
-wrap them in `shard_map` bodies around capacity-padded `hash_exchange`
-collectives.  Together they lower any light-subquery stage emitted by the
+primitives (`sharded_join_step`, `sharded_semijoin`, `sharded_intersect`,
+`sharded_colocated_join`) wrap them in `shard_map` bodies around
+capacity-padded `hash_exchange` collectives (`sharded_colocated_join` is the
+communication-free member: fragments already co-located by a grid route).
+Together with `repro.dataplane.grid` they lower every stage emitted by the
 round-program compiler (repro.mpc.program) onto a device mesh — the
-`DataplaneExecutor` (repro.mpc.executors) drives them.
+`DataplaneExecutor` (repro.mpc.executors) drives one primitive per RoundOp.
+
+Overflow contract: every sharded primitive returns ``ovf`` of shape (p, 2) —
+column 0 counts *slot* (routing-buffer) overflow, column 1 counts *output*
+overflow — so the executor's retry can double only the capacity that actually
+overflowed (and re-randomize routing for slot overflow).
 
 `hypercube_binary_join` is the original one-round routed join
 R(A,B) ⋈ S(B,C) → (A,B,C), now a thin wrapper over `sharded_join_step`.
@@ -161,16 +168,18 @@ def _join_step_fn(mesh, axis_name, ka, kb, cap_slot, cap_mid, cap_out, dup_pairs
 
     def body(a_rows, a_cnt, b_rows, b_cnt, off):
         a_rows, a_cnt, b_rows, b_cnt = a_rows[0], a_cnt[0], b_rows[0], b_cnt[0]
-        a2, ca, o1 = hash_exchange(a_rows, a_cnt, ka, axis_name, p, cap_slot, cap_mid, off)
-        b2, cb, o2 = hash_exchange(b_rows, b_cnt, kb, axis_name, p, cap_slot, cap_mid, off)
+        a2, ca, s1, m1 = hash_exchange(a_rows, a_cnt, ka, axis_name, p, cap_slot, cap_mid, off)
+        b2, cb, s2, m2 = hash_exchange(b_rows, b_cnt, kb, axis_name, p, cap_slot, cap_mid, off)
         out, cnt, o3 = local_join_filtered(a2, ca, b2, cb, ka, kb, cap_out, dup_pairs)
-        return out[None], cnt[None], (o1 + o2 + o3)[None]
+        # exchange-receive (cap_mid) overflow counts as routing, not output
+        ovf = jnp.stack([s1 + s2 + m1 + m2, o3]).astype(jnp.int32)
+        return out[None], cnt[None], ovf[None]
 
     return jax.jit(shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None, None), P(axis_name), P()),
-        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name)),
+        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None)),
         check_rep=False,
     ))
 
@@ -188,7 +197,7 @@ def sharded_join_step(
     """One distributed binary-join step under shard_map: both sides are
     hash-exchanged on their key column, then joined locally (with optional
     duplicate-attribute filtering).  Inputs/outputs sharded over axis 0.
-    Returns (out (p, cap_out, w), counts (p,), overflow (p,))."""
+    Returns (out (p, cap_out, w), counts (p,), overflow (p, 2) [slot, out])."""
     fn = _join_step_fn(
         mesh, axis_name, ka, kb, cap_slot, cap_mid, cap_out, tuple(dup_pairs)
     )
@@ -203,15 +212,17 @@ def _semijoin_fn(mesh, axis_name, cols, cap_slot, cap_out):
 
     def body(rows, cnt, offs, *pieces):
         rows, cnt = rows[0], cnt[0]
-        ovf = jnp.zeros((), jnp.int32)
+        ovf_slot = jnp.zeros((), jnp.int32)
+        ovf_out = jnp.zeros((), jnp.int32)
         for i, col in enumerate(cols):
             pv, pc = pieces[2 * i][0], pieces[2 * i + 1][0]
-            rows, cnt, o = hash_exchange(
+            rows, cnt, o_s, o_o = hash_exchange(
                 rows, cnt, col, axis_name, p, cap_slot, cap_out, offs[i]
             )
-            ovf += o.astype(jnp.int32)
+            ovf_slot += o_s.astype(jnp.int32)
+            ovf_out += o_o.astype(jnp.int32)
             rows, cnt = local_semijoin(rows, cnt, col, pv, pc)
-        return rows[None], cnt[None], ovf[None]
+        return rows[None], cnt[None], jnp.stack([ovf_slot, ovf_out])[None]
 
     piece_specs = []
     for _ in cols:
@@ -220,7 +231,7 @@ def _semijoin_fn(mesh, axis_name, cols, cap_slot, cap_out):
         body,
         mesh=mesh,
         in_specs=(P(axis_name, None, None), P(axis_name), P(None), *piece_specs),
-        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name)),
+        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None)),
         check_rep=False,
     ))
 
@@ -238,7 +249,7 @@ def sharded_semijoin(
     piece_counts (p,)): for each entry the rows are hash-exchanged on ``col``
     with ``salt`` (the same salt that distributed the piece, so piece and rows
     land on the same device) and filtered by membership.  Lowers the SemiJoin
-    op of the round-program IR.  Returns (rows, counts, overflow)."""
+    op of the round-program IR.  Returns (rows, counts, overflow (p, 2))."""
     cols = tuple(int(col) for col, _, _, _ in filters)
     offs = jnp.asarray([salt_offset(int(s)) for _, s, _, _ in filters], jnp.int32)
     piece_args = []
@@ -255,22 +266,24 @@ def _intersect_fn(mesh, axis_name, n, cap_slot, cap_out):
     p = mesh.shape[axis_name]
 
     def body(off, *flat):
-        ovf = jnp.zeros((), jnp.int32)
+        ovf_slot = jnp.zeros((), jnp.int32)
+        ovf_out = jnp.zeros((), jnp.int32)
         cur = None
         cur_cnt = None
         for i in range(n):
             v, c = flat[2 * i][0], flat[2 * i + 1][0]
-            ex, exc, o = hash_exchange(
+            ex, exc, o_s, o_o = hash_exchange(
                 v[:, None], c, 0, axis_name, p, cap_slot, cap_out, off
             )
-            ovf += o.astype(jnp.int32)
+            ovf_slot += o_s.astype(jnp.int32)
+            ovf_out += o_o.astype(jnp.int32)
             uv, uc = local_unique(ex[:, 0], exc)
             if cur is None:
                 cur, cur_cnt = uv, uc
             else:
                 kept, kc = local_semijoin(cur[:, None], cur_cnt, 0, uv, uc)
                 cur, cur_cnt = kept[:, 0], kc
-        return cur[None], cur_cnt[None], ovf[None]
+        return cur[None], cur_cnt[None], jnp.stack([ovf_slot, ovf_out])[None]
 
     specs = [P()]
     for _ in range(n):
@@ -279,7 +292,7 @@ def _intersect_fn(mesh, axis_name, n, cap_slot, cap_out):
         body,
         mesh=mesh,
         in_specs=tuple(specs),
-        out_specs=(P(axis_name, None), P(axis_name), P(axis_name)),
+        out_specs=(P(axis_name, None), P(axis_name), P(axis_name, None)),
         check_rep=False,
     ))
 
@@ -297,13 +310,56 @@ def sharded_intersect(
     copies of a value meet on one device), deduplicated, and intersected
     locally via the merge_join_counts membership probe.  Lowers the
     HashPartition op of the round-program IR.  Returns
-    (vals (p, cap_out), counts (p,), overflow (p,)) distributed by
+    (vals (p, cap_out), counts (p,), overflow (p, 2)) distributed by
     hash(value, salt) — ready to serve as a `sharded_semijoin` filter."""
     args = []
     for pv, pc in pieces:
         args += [pv, pc]
     fn = _intersect_fn(mesh, axis_name, len(pieces), cap_slot, cap_out)
     return fn(jnp.int32(salt_offset(salt)), *args)
+
+
+@lru_cache(maxsize=512)
+def _colocated_join_fn(mesh, axis_name, ka, kb, cap_out, dup_pairs):
+    from jax.experimental.shard_map import shard_map
+
+    def body(a_rows, a_cnt, b_rows, b_cnt):
+        out, cnt, ovf = local_join_filtered(
+            a_rows[0], a_cnt[0], b_rows[0], b_cnt[0], ka, kb, cap_out, dup_pairs
+        )
+        # no exchange ⇒ no slot channel; only output capacity can overflow
+        return out[None], cnt[None], jnp.stack(
+            [jnp.zeros((), jnp.int32), ovf.astype(jnp.int32)]
+        )[None]
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None, None), P(axis_name)),
+        out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None)),
+        check_rep=False,
+    ))
+
+
+def sharded_colocated_join(
+    mesh,
+    axis_name: str,
+    a_global: jax.Array, a_counts: jax.Array,   # (p, capA, wa), (p,) device-sharded
+    b_global: jax.Array, b_counts: jax.Array,
+    ka: int, kb: int,
+    cap_out: int,
+    dup_pairs: Tuple[Tuple[int, int], ...] = (),
+):
+    """A purely device-local join step under shard_map — **no communication**.
+
+    Lowers the LocalJoin op of the round-program IR: after `sharded_grid_route`
+    every fragment of a virtual grid cell lives on device ``cell % p`` tagged
+    with the cell id in column 0, so joining on the cell-id columns (with
+    ``dup_pairs`` equality-filtering the attributes shared inside the cell)
+    reproduces each cell's local join without moving a byte.  Returns
+    (out (p, cap_out, w), counts (p,), overflow (p, 2) [always-0 slot, out])."""
+    fn = _colocated_join_fn(mesh, axis_name, ka, kb, cap_out, tuple(dup_pairs))
+    return fn(a_global, a_counts, b_global, b_counts)
 
 
 def hypercube_binary_join(
@@ -315,8 +371,10 @@ def hypercube_binary_join(
     cap_slot: int, cap_mid: int, cap_out: int,
 ):
     """The one-round routed join R(A,B) ⋈ S(B,C): a single `sharded_join_step`
-    with no duplicate attributes (kept as the named Lemma 3.3 entry point)."""
-    return sharded_join_step(
+    with no duplicate attributes (kept as the named Lemma 3.3 entry point;
+    overflow is reported as a single combined (p,) counter)."""
+    out, cnt, ovf = sharded_join_step(
         mesh, axis_name, a_global, a_counts, b_global, b_counts,
         ka, kb, cap_slot, cap_mid, cap_out,
     )
+    return out, cnt, ovf.sum(axis=-1)

@@ -18,6 +18,40 @@ from ..core.query import Attr, Relation
 from .simulator import MPCSimulator, scatter_input
 
 
+def cp_cell_contribs(dims: Sequence[int], list_idx: int) -> Tuple[int, Tuple[int, ...]]:
+    """Static (host-side) half of `cells_for_ids`: the flat-cell stride of
+    ``list_idx``'s own coordinate plus the flat contribution of every
+    combination of the *other* dimensions.  Shared by the numpy and the jnp
+    routing paths so both enumerate the exact same cells."""
+    dims = list(dims)
+    stride = math.prod(dims[list_idx + 1:]) if list_idx + 1 < len(dims) else 1
+    other_dims = [d for i, d in enumerate(dims) if i != list_idx]
+    n_other = math.prod(other_dims) if other_dims else 1
+    contribs = np.zeros((n_other,), dtype=np.int64)
+    if other_dims:
+        grid = np.indices(other_dims).reshape(len(other_dims), -1).T
+        j = 0
+        for di in range(len(dims)):
+            if di == list_idx:
+                continue
+            s = math.prod(dims[di + 1:]) if di + 1 < len(dims) else 1
+            contribs += grid[:, j] * s
+            j += 1
+    return stride, tuple(int(c) for c in contribs)
+
+
+def cp_cells_dev(ids, dims: Sequence[int], list_idx: int):
+    """jnp cell enumeration for list ``list_idx``: traced (n,) ids → (n,
+    n_other) flat cells.  The single device-side implementation — both
+    `CartesianGrid.cells_for_ids_dev` and the dataplane GridRoute lowering
+    call it, so route math cannot diverge from the grid geometry."""
+    import jax.numpy as jnp
+
+    stride, contribs = cp_cell_contribs(dims, list_idx)
+    coords = (ids % dims[list_idx]).astype(jnp.int32)
+    return coords[:, None] * stride + jnp.asarray(contribs, dtype=jnp.int32)[None, :]
+
+
 class CartesianGrid:
     """Grid geometry + routing for Lemma 3.1. Lists must be sorted by size desc."""
 
@@ -48,6 +82,15 @@ class CartesianGrid:
             else:
                 flat += combos[:, di].reshape(1, -1) * stride
         return flat
+
+    def cells_for_ids_dev(self, list_idx: int, ids) -> "jax.Array":  # noqa: F821
+        """jnp twin of `cells_for_ids` for device-side routing: ``ids`` is a
+        traced (n,) int array, the grid structure is static (baked into the
+        trace).  Returns (n, n_other) flat cell ids identical to the numpy
+        version — delegates to `cp_cells_dev`, the same function the dataplane
+        GridRoute lowering traces, so simulator and device routing agree on
+        the Lemma 3.1 geometry by construction."""
+        return cp_cells_dev(ids, self.dims, list_idx)
 
     def theoretical_load(self) -> float:
         """The bound (3.2): O(max_i |Join(R_1..R_i)|^{1/i} / p^{1/i})."""

@@ -10,12 +10,14 @@ which routes*; an :class:`Executor` decides *who executes them*.
   ``per_h_counts`` and ``parallel_total_load`` (locked by
   tests/test_program_ir.py golden values).
 
-* :class:`DataplaneExecutor` lowers the HashPartition / SemiJoin / LocalJoin
-  ops of light-subquery stages onto the JAX data plane: capacity-padded
-  ``hash_exchange`` collectives + the merge_join_counts Pallas probe under
-  ``shard_map``.  Stages with isolated attributes (the Lemma 3.1 cartesian
-  grid) are not lowered yet — the executor rejects such programs loudly; the
-  simulator remains the complete reference (docs/DESIGN.md §7).
+* :class:`DataplaneExecutor` lowers every op of every compiled program onto
+  the JAX data plane — one lowering rule per :class:`RoundOp`, dispatched over
+  ``program.ops``: capacity-padded ``hash_exchange`` / ``sharded_grid_route``
+  collectives + the merge_join_counts Pallas probe under ``shard_map``.
+  Stages with isolated attributes run the Lemma 3.1 cartesian grid composed
+  with the Lemma 3.3 HyperCube (the Lemma 3.2 cell mapping lives in
+  :class:`~repro.mpc.program.StageGeometry`, shared with the simulator), so
+  the device backend covers the whole of Theorem 6.2 (docs/DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -23,7 +25,7 @@ from __future__ import annotations
 import hashlib
 import math
 from collections import defaultdict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -425,8 +427,7 @@ class SimulatorExecutor:
             if geo.skip:
                 continue
             grp = geo.step3_group
-            hc_size = geo.hc_grid.size if geo.hc_grid else 1
-            cp_size = geo.grid.size if geo.grid else 1
+            hc_size, cp_size = geo.hc_size, geo.cp_size
 
             # CP side: every grid cell is instantiated in every HC column.
             if geo.grid:
@@ -444,7 +445,7 @@ class SimulatorExecutor:
                                 for cell in np.unique(flat).tolist():
                                     rows = vals[flat == cell]
                                     for h_cell in range(hc_size):
-                                        v = cell * hc_size + h_cell
+                                        v = geo.cell(cell, h_cell)
                                         sim.send(
                                             grp.phys(v),
                                             ("cp", st.hkey, st.ekey, v, x),
@@ -453,7 +454,7 @@ class SimulatorExecutor:
                         else:
                             for cell in range(cp_size):
                                 for h_cell in range(hc_size):
-                                    v = cell * hc_size + h_cell
+                                    v = geo.cell(cell, h_cell)
                                     sim.send(
                                         grp.phys(v), ("cp", st.hkey, st.ekey, v, x), vals
                                     )
@@ -467,10 +468,10 @@ class SimulatorExecutor:
                         rows = sim.local(mid, tag, arity=2)
 
                         def deliver(
-                            h_cell, out_tag, rs, _grp=grp, _hc=hc_size, _cp=cp_size, _st=st
+                            h_cell, out_tag, rs, _grp=grp, _geo=geo, _cp=cp_size, _st=st
                         ):
                             for c in range(_cp):
-                                v = c * _hc + h_cell
+                                v = _geo.cell(c, h_cell)
                                 sim.send(
                                     _grp.phys(v), ("hc", _st.hkey, _st.ekey, v, out_tag), rs
                                 )
@@ -497,7 +498,6 @@ class SimulatorExecutor:
                 continue
             plan = st.plan
             grp = geo.step3_group
-            hc_size = geo.hc_grid.size if geo.hc_grid else 1
             l_minus_i = [a for a in plan.light if a not in plan.isolated]
             h_count = 0
             for v in range(grp.size):
@@ -578,45 +578,111 @@ class DataplaneJoinResult:
     rows: Optional[np.ndarray]
     per_h_counts: Dict[Tuple[Attr, ...], int]
     retries: int = 0    # capacity-doubling retries triggered by overflow
+    # one entry per retry: ((H, η), op round name, "slot" | "out" | "slot+out")
+    retry_log: List[Tuple[Tuple, str, str]] = field(default_factory=list)
 
 
 class DataplaneUnsupported(NotImplementedError):
-    """The program contains a stage the dataplane cannot lower yet."""
+    """The program contains an op type with no dataplane lowering rule.
+
+    Every op `compile_plan` emits has one (the acceptance bar of the per-op
+    lowering layer); this fires only for op types introduced by a rewrite pass
+    the dataplane has not been taught about — loudly, never silently."""
 
 
-def _salt(*key) -> int:
-    """Stable small salt for hash_exchange (shared randomness: every host
-    derives the same salt from the stage key alone)."""
-    h = hashlib.blake2b(repr(key).encode(), digest_size=4).digest()
-    return int.from_bytes(h, "little") % (1 << 20)
+def _salt(*key, attempt: int = 0) -> int:
+    """Stable 31-bit salt for the routing hashes (shared randomness: every
+    host derives the same salt from the stage key alone).  ``attempt`` threads
+    the overflow-retry count into the salt so a capacity-doubling retry also
+    re-randomizes the routing — the paper draws fresh randomness per attempt,
+    which is what makes the 1/p^c failure probability per-attempt independent."""
+    h = hashlib.blake2b(repr((key, attempt)).encode(), digest_size=8).digest()
+    return int.from_bytes(h, "little") % (1 << 31)
+
+
+def _pow2(n: int) -> int:
+    """Round a capacity up to a power of two (≥ 16): retries double caps, so
+    pow2 buckets make repeated executor calls hit the jit cache."""
+    return 1 << max(4, int(n - 1).bit_length() if n > 1 else 0)
+
+
+@dataclass
+class _StageState:
+    """Device-resident state of one (H, η) stage as it flows through the ops.
+
+    ``skip_count`` mirrors the simulator's geo.skip rule exactly: a stage whose
+    isolated R''_X is empty never reaches LocalJoin, so it contributes *no*
+    per-H count entry; every other stage contributes one (possibly 0)."""
+
+    stage: ProgramStage
+    skey: Tuple
+    light: Optional[List] = None          # [(scheme, blocks, counts, n_rows)]
+    unary: Optional[Dict[Attr, List]] = None   # x -> [(vals, counts, n)] staged
+    host_piece_n: Optional[Dict[Attr, int]] = None  # |R''_X| (host cross-check)
+    pieces: Dict[Attr, Tuple] = field(default_factory=dict)   # x -> (vals, counts)
+    piece_salt: Dict[Attr, int] = field(default_factory=dict)
+    piece_n: Dict[Attr, int] = field(default_factory=dict)
+    geo: Optional[StageGeometry] = None
+    routed: Optional[List] = None         # [(scheme incl. cell col, blocks, counts)]
+    n_out: int = 0
+    rows: Optional[np.ndarray] = None
+    empty: bool = False
+    skip_count: bool = False
 
 
 class DataplaneExecutor:
-    """Runs light-subquery programs on a JAX device mesh under shard_map.
+    """Runs every compiled :class:`RoundProgram` on a JAX device mesh.
 
-    Lowering (per stage):
-      Scatter/RouteResidual → host carves Q'(η) from the shared histogram and
-        stages padded blocks onto the devices (the histogram is host metadata
-        in the paper's model — every machine already holds it);
-      HashPartition → `sharded_intersect`: unary residuals exchanged by
-        hash(value) and intersected on-device into R''_X(η);
-      SemiJoin → `sharded_semijoin`: light edges exchanged by hash(X) / hash(Y)
-        with the same salts, filtered against the co-located pieces;
-      LocalJoin → a left-deep chain of `sharded_join_step`s (exchange both
-        sides on the shared attribute + merge_join_counts local join, with
-        duplicate-attribute filtering for cyclic subqueries).
+    The backend is a *per-op lowering layer* that mirrors the IR vocabulary:
+    one lowering rule per :class:`RoundOp`, dispatched over ``program.ops``
+    exactly like the simulator's interpreter — a program rewrite (e.g.
+    ``fuse_semijoin_pass``) changes device execution without executor edits.
 
-    Overflowed capacities are detected (never dropped) and the stage retries
-    with doubled buffers — replacing the paper's 1/p^c failure probability.
-    Stages with isolated attributes (CP grid) raise :class:`DataplaneUnsupported`.
+      Scatter          host no-op (inputs are host-resident; the histogram is
+                       shared metadata in the paper's model)
+      RouteResidual    host carves Q'(η) per stage and blockifies the padded
+                       residual blocks evenly onto the devices
+      HashPartition    `sharded_intersect`: unary residuals exchanged by
+                       hash(value) and intersected on-device into R''_X(η)
+      SemiJoin         `sharded_semijoin`: phase x/fused-route filters the
+                       light edges' X column, phase y/fused-filter the Y
+                       column, against the co-located pieces
+      BroadcastSizes   device piece counts pulled to host (the O(p²) size
+                       round); `stage_geometry` — shared verbatim with the
+                       simulator — turns them into the CP × HyperCube shape
+      GridRoute        `sharded_grid_route`: isolated pieces get global ids
+                       from the broadcast counts and go to their
+                       `CartesianGrid.cells_for_ids` cells, light residents to
+                       their `HyperCubeGrid` shares, every copy tagged with
+                       its Lemma 3.2 virtual cell and exchanged by cell % p
+      LocalJoin        a chain of communication-free `sharded_colocated_join`
+                       steps keyed on the cell column (shared attributes
+                       equality-filtered, CP lists appended as per-cell
+                       cartesian factors)
+
+    Overflow is detected (never dropped) per op and channel: a *slot*
+    overflow doubles the routing buffers and re-randomizes the routing salts
+    (fresh randomness per attempt, as in the paper); an *output* overflow
+    doubles only the output buffer — replacing the paper's 1/p^c failure
+    probability with deterministic retry.
     """
+
+    _LOWERING = {
+        Scatter: "_lower_scatter",
+        RouteResidual: "_lower_route_residual",
+        HashPartition: "_lower_hash_partition",
+        SemiJoin: "_lower_semijoin",
+        BroadcastSizes: "_lower_broadcast_sizes",
+        GridRoute: "_lower_grid_route",
+        LocalJoin: "_lower_local_join",
+    }
 
     def __init__(
         self,
         mesh=None,
         axis_name: str = "join",
         slack: int = 4,
-        max_retries: int = 4,
+        max_retries: int = 6,
     ):
         import jax
 
@@ -631,34 +697,53 @@ class DataplaneExecutor:
         self.slack = slack
         self.max_retries = max_retries
 
+    # -- capacity guesses (pow2-bucketed so retries and repeat runs hit the
+    # -- jit cache; all of them are starting points for the doubling retry) ---
+
+    def _cap(self, n_total: int) -> int:
+        """Per-device receive/output capacity for n_total rows spread over p."""
+        return _pow2(self.slack * (-(-max(1, n_total) // self.p)))
+
+    def _slot_cap(self, n_total: int) -> int:
+        """Per-(src, dst) send-slot capacity: a device holds ~n/p rows and
+        spreads them over p destinations."""
+        return _pow2(self.slack * (-(-max(1, n_total) // (self.p * self.p))))
+
     # -- public entry ---------------------------------------------------------
 
     def run(self, program: RoundProgram, materialize: bool = True) -> DataplaneJoinResult:
-        self._check_ops(program)
-        for st in program.stages:
-            if st.plan.isolated:
+        self._retries = 0
+        self._retry_log: List[Tuple[Tuple, str, str]] = []
+        self._materialize = materialize
+        states = [
+            _StageState(stage=st, skey=(st.hkey, st.ekey)) for st in program.stages
+        ]
+
+        for op in program.ops:
+            try:
+                lower = getattr(self, self._LOWERING[type(op)])
+            except KeyError:
                 raise DataplaneUnsupported(
-                    f"stage H={st.hkey} η={st.ekey} needs the Lemma 3.1 CP grid "
-                    "(isolated attributes) — not lowered yet; use SimulatorExecutor"
-                )
+                    f"op {op!r} has no dataplane lowering rule"
+                ) from None
+            for state in states:
+                if not state.empty:
+                    lower(program, state, op)
+
         counts: Dict[Tuple[Attr, ...], int] = defaultdict(int)
         chunks: List[np.ndarray] = []
-        retries = 0
-
         for mid, row in program.emit:
             chunks.append(row)
         for hkey, c in program.emit_counts.items():
             counts[hkey] += c
-
-        for st in program.stages:
-            rows, n_retry = self._run_stage(program, st)
-            retries += n_retry
-            if rows.shape[0]:
-                chunks.append(rows)
-                counts[st.hkey] += rows.shape[0]
+        for state in states:
+            if state.skip_count:
+                continue
+            counts[state.stage.hkey] += state.n_out
+            if state.rows is not None and state.rows.shape[0]:
+                chunks.append(state.rows)
 
         rows_out = None
-        total = sum(int(c.shape[0]) for c in chunks)
         if materialize:
             rows_out = (
                 np.concatenate(chunks, axis=0)
@@ -667,176 +752,322 @@ class DataplaneExecutor:
             )
         return DataplaneJoinResult(
             p=self.p,
-            count=total,
+            count=sum(counts.values()),
             rows=rows_out,
             per_h_counts=dict(counts),
-            retries=retries,
+            retries=self._retries,
+            retry_log=list(self._retry_log),
         )
 
-    @staticmethod
-    def _check_ops(program: RoundProgram) -> None:
-        """The dataplane lowers the op *vocabulary*, not arbitrary op lists:
-        its per-stage pipeline covers exactly the known ops (both semi-join
-        phasings fold into the same per-attribute filters, so fused and
-        unfused programs lower identically).  Anything else — a new op type,
-        or a pass that dropped a required op — must fail loudly here instead
-        of silently diverging from the simulator backend."""
-        known = (Scatter, RouteResidual, HashPartition, SemiJoin, BroadcastSizes,
-                 GridRoute, LocalJoin)
-        for op in program.ops:
-            if not isinstance(op, known):
-                raise DataplaneUnsupported(f"op {op!r} has no dataplane lowering")
-        required = (Scatter, RouteResidual, HashPartition, SemiJoin, LocalJoin)
-        missing = [t.__name__ for t in required
-                   if not any(isinstance(op, t) for op in program.ops)]
-        if missing and program.stages:
-            raise DataplaneUnsupported(
-                f"program is missing ops {missing}; the dataplane pipeline "
-                "cannot represent a partial round structure"
-            )
+    # -- overflow-retry harness ----------------------------------------------
 
-    # -- one (H, η) stage -----------------------------------------------------
-
-    def _run_stage(self, program: RoundProgram, st: ProgramStage):
-        query, stats = program.query, program.stats
-        plan = st.plan
-        out_cols = list(program.out_cols)
-        empty = np.zeros((0, len(out_cols)), dtype=np.int64)
-
-        residuals = residual_relations(query, stats, plan, st.cfg.eta)
-        if residuals is None:
-            return empty, 0
-
-        from ..dataplane.exchange import blockify
-
-        light_staged = []   # (scheme, blocks, counts, n_rows) — host staging, once
-        for e in plan.light_edges:
-            rel = residuals[(e, query.relation_for(e).scheme)]
-            if len(rel) == 0:
-                return empty, 0
-            blocks, cnts = blockify(rel.data, self.p, None)
-            light_staged.append(
-                (list(query.relation_for(e).scheme), blocks, cnts, len(rel))
-            )
-        piece_staged: Dict[Attr, List[Tuple]] = {}
-        for x in plan.border:
-            pieces = [residuals[(e, (x,))] for e in plan.cross_edges if x in e]
-            if any(len(p) == 0 for p in pieces):
-                return empty, 0
-            staged = []
-            for r in pieces:
-                bv, bc = blockify(r.data[:, 0], self.p, None)
-                staged.append((bv[:, :, 0], bc, len(r)))
-            piece_staged[x] = staged
-        if not light_staged:
-            # isolated == ∅ and no light edges ⇒ light == ∅ ⇒ H = attset,
-            # which compile_plan turned into emits; nothing to do here.
-            return empty, 0
-
-        caps_scale = 1
+    def _retry_rounds(self, skey, round_name: str, attempt_fn):
+        """The one retry harness: run ``attempt_fn(attempt) -> (result, kinds)``
+        until ``kinds`` (the set of overflowed capacity channels, which the
+        callee has already doubled) comes back empty.  All retry accounting —
+        attempt budget, counter, log, failure error — lives here so every
+        lowering reports retries identically."""
         for attempt in range(self.max_retries + 1):
-            rows, overflowed = self._try_stage(
-                program, st, light_staged, piece_staged, caps_scale
-            )
-            if not overflowed:
-                return rows, attempt
-            caps_scale *= 2
+            result, kinds = attempt_fn(attempt)
+            if not kinds:
+                return result
+            self._retries += 1
+            self._retry_log.append((skey, round_name, "+".join(sorted(kinds))))
         raise RuntimeError(
-            f"stage H={st.hkey} η={st.ekey} still overflows after "
+            f"stage {skey} op {round_name} still overflows after "
             f"{self.max_retries} capacity doublings"
         )
 
-    def _try_stage(self, program, st, light_staged, piece_staged, caps_scale):
+    def _with_retry(self, skey, round_name: str, caps: Dict[str, int], run):
+        """Run ``run(caps, attempt) -> (result, [ovf arrays])`` until no
+        overflow, doubling only the capacity channel that overflowed (slot
+        overflow also doubles 'mid' when present; the attempt number feeds the
+        routing salts so slot retries draw fresh randomness)."""
+
+        def attempt_fn(attempt):
+            result, ovfs = run(caps, attempt)
+            tot = np.zeros(2, dtype=np.int64)
+            for o in ovfs:
+                tot += np.asarray(o).reshape(-1, 2).sum(axis=0)
+            kinds = set()
+            if int(tot[0]):
+                for k in caps:
+                    if k != "out":
+                        caps[k] *= 2
+                kinds.add("slot")
+            if int(tot[1]):
+                caps["out"] *= 2
+                kinds.add("out")
+            return result, kinds
+
+        return self._retry_rounds(skey, round_name, attempt_fn)
+
+    # -- per-op lowering rules ------------------------------------------------
+
+    def _lower_scatter(self, program: RoundProgram, state: _StageState, op) -> None:
+        """Scatter costs no load in the MPC model; the dataplane holds the
+        inputs host-side (the histogram is shared metadata), so placement
+        happens when RouteResidual stages the carved residuals."""
+
+    def _lower_route_residual(self, program, state, op) -> None:
+        from ..dataplane.exchange import blockify
+
+        query, stats = program.query, program.stats
+        plan = state.stage.plan
+        residuals = residual_relations(query, stats, plan, state.stage.cfg.eta)
+        if residuals is None:
+            raise RuntimeError(
+                f"stage {state.skey} compiled for an infeasible η — compiler bug"
+            )
+
+        # Host view of R''_X = ∩ unary pieces: decides the stage's fate the
+        # same way the simulator's geometry does (empty isolated piece ⇒
+        # geo.skip ⇒ no per-H count entry; any other empty input ⇒ a normal
+        # zero-count stage).
+        host_piece: Dict[Attr, np.ndarray] = {}
+        for x in plan.border:
+            vals = None
+            for e in plan.cross_edges:
+                if x not in e:
+                    continue
+                pv = np.unique(residuals[(e, (x,))].data[:, 0])
+                vals = pv if vals is None else np.intersect1d(
+                    vals, pv, assume_unique=True
+                )
+            host_piece[x] = vals
+        if any(host_piece[x].size == 0 for x in plan.isolated):
+            state.empty, state.skip_count = True, True
+            return
+        if any(v.size == 0 for v in host_piece.values()):
+            state.empty = True
+            return
+
+        state.light = []
+        for e in plan.light_edges:
+            rel = residuals[(e, query.relation_for(e).scheme)]
+            if len(rel) == 0:
+                state.empty = True
+                return
+            blocks, cnts = blockify(rel.data, self.p, None)
+            state.light.append(
+                (list(query.relation_for(e).scheme), blocks, cnts, len(rel))
+            )
+        state.unary = {}
+        for x in plan.border:
+            staged = []
+            for e in plan.cross_edges:
+                if x not in e:
+                    continue
+                r = residuals[(e, (x,))]
+                bv, bc = blockify(r.data[:, 0], self.p, None)
+                staged.append((bv[:, :, 0], bc, len(r)))
+            state.unary[x] = staged
+        state.host_piece_n = {x: int(v.size) for x, v in host_piece.items()}
+
+    def _lower_hash_partition(self, program, state, op) -> None:
+        from ..dataplane.join import sharded_intersect
+
+        for x, staged in state.unary.items():
+            n_max = max(n for _, _, n in staged)
+            caps = {"slot": self._slot_cap(n_max), "out": self._cap(n_max)}
+
+            def run(caps, attempt, _staged=staged, _x=x):
+                salt = _salt(state.skey, _x, attempt=attempt)
+                vals, cnts, ovf = sharded_intersect(
+                    self.mesh, self.axis_name,
+                    [(bv, bc) for bv, bc, _ in _staged],
+                    salt=salt, cap_slot=caps["slot"], cap_out=caps["out"],
+                )
+                return (vals, cnts, salt), [ovf]
+
+            vals, cnts, salt = self._with_retry(state.skey, op.round, caps, run)
+            total = int(np.asarray(cnts).sum())
+            if total != state.host_piece_n[x]:
+                raise RuntimeError(
+                    f"stage {state.skey}: device |R''_{x}| = {total} != host "
+                    f"{state.host_piece_n[x]} — routing bug"
+                )
+            state.pieces[x] = (vals, cnts)
+            state.piece_salt[x] = salt
+            state.piece_n[x] = total
+
+    def _lower_semijoin(self, program, state, op) -> None:
+        """Phase x (and its fused-route twin) filters column 0, phase y (and
+        fused-filter) column 1 — the fused rewrite reorders the detour but the
+        per-attribute filters are the same, so both program shapes lower
+        through this one rule."""
+        from ..dataplane.join import sharded_semijoin
+
+        if op.phase in ("x", "fused-route"):
+            col = 0
+        elif op.phase in ("y", "fused-filter"):
+            col = 1
+        else:
+            raise DataplaneUnsupported(f"SemiJoin phase {op.phase!r}")
+
+        for idx, (scheme, blocks, cnts, n) in enumerate(state.light):
+            attr = scheme[col]
+            if attr not in state.pieces:
+                continue
+            pv, pc = state.pieces[attr]
+            caps = {"slot": self._slot_cap(n), "out": self._cap(n)}
+
+            def run(caps, attempt, _b=blocks, _c=cnts, _pv=pv, _pc=pc, _a=attr):
+                # the exchange salt is pinned to the piece's distribution salt
+                # (rows must land where HashPartition put the piece), so only
+                # capacities scale on retry here.
+                rows, c, ovf = sharded_semijoin(
+                    self.mesh, self.axis_name, _b, _c,
+                    [(col, state.piece_salt[_a], _pv, _pc)],
+                    cap_slot=caps["slot"], cap_out=caps["out"],
+                )
+                return (rows, c), [ovf]
+
+            blocks, cnts = self._with_retry(state.skey, op.round, caps, run)
+            n2 = int(np.asarray(cnts).sum())
+            state.light[idx] = (scheme, blocks, cnts, n2)
+            if n2 == 0:
+                state.empty = True
+                return
+
+    def _lower_broadcast_sizes(self, program, state, op) -> None:
+        """The O(p²) size round: per-device piece counts cross to the host;
+        `stage_geometry` (shared verbatim with the simulator) turns them into
+        the stage's CP grid × HyperCube shape and the global-id offsets."""
+        entries: Dict[Attr, List[Tuple[int, int]]] = {}
+        for x in state.stage.plan.isolated:
+            cnts = np.asarray(state.pieces[x][1])
+            entries[x] = list(enumerate(int(c) for c in cnts.tolist()))
+        state.geo = stage_geometry(program, state.stage, entries)
+        if state.geo.skip:
+            state.empty, state.skip_count = True, True
+
+    def _lower_grid_route(self, program, state, op) -> None:
+        from ..dataplane.grid import cp_route_spec, hc_route_spec, sharded_grid_route
+
+        geo = state.geo
+        if geo is None:
+            raise DataplaneUnsupported("GridRoute before BroadcastSizes")
+        if geo.cp_size * geo.hc_size >= 1 << 31:
+            raise RuntimeError(f"stage {state.skey}: virtual grid exceeds int32")
+        routed: List = []
+
+        # HC side first (join order: light join, then CP cartesian factors).
+        # One retry loop spans all light fragments: the per-attribute
+        # coordinate salts must stay consistent across edges, so a fresh
+        # attempt re-routes every fragment under new salts.
+        if state.light:
+            specs = [
+                hc_route_spec(geo.hc_grid, scheme, geo.cp_size)
+                for scheme, _, _, _ in state.light
+            ]
+            caps = [
+                {"slot": self._slot_cap(n * s.fanout), "out": self._cap(n * s.fanout)}
+                for (_, _, _, n), s in zip(state.light, specs)
+            ]
+            def route_all(attempt):
+                salt_for = {
+                    a: _salt(state.skey, "hc", a, attempt=attempt)
+                    for a in geo.hc_grid.attrs
+                }
+                results = []
+                kinds: set = set()
+                for (scheme, blocks, cnts, n), spec, cap in zip(
+                    state.light, specs, caps
+                ):
+                    salts = [salt_for[scheme[col]] for col, _, _ in spec.fixed]
+                    rows, c, ovf = sharded_grid_route(
+                        self.mesh, self.axis_name, blocks, cnts, spec,
+                        salts=salts, cap_slot=cap["slot"], cap_out=cap["out"],
+                    )
+                    ovf = np.asarray(ovf).sum(axis=0)
+                    if int(ovf[0]):
+                        cap["slot"] *= 2
+                        kinds.add("slot")
+                    if int(ovf[1]):
+                        cap["out"] *= 2
+                        kinds.add("out")
+                    results.append((["#cell"] + list(scheme), rows, c))
+                return results, kinds
+
+            routed.extend(self._retry_rounds(state.skey, op.round, route_all))
+
+        # CP side: id-deterministic routing (no salts), per-piece retry.
+        for li, x in enumerate(geo.iso_order):
+            vals, cnts = state.pieces[x]
+            spec = cp_route_spec(geo.grid, li, geo.hc_size)
+            offsets = np.asarray(
+                [geo.offsets[(x, dev)] for dev in range(self.p)], dtype=np.int64
+            )
+            n = state.piece_n[x]
+            caps = {
+                "slot": self._slot_cap(n * spec.fanout),
+                "out": self._cap(n * spec.fanout),
+            }
+
+            def run(caps, attempt, _v=vals, _c=cnts, _s=spec, _o=offsets):
+                rows, c, ovf = sharded_grid_route(
+                    self.mesh, self.axis_name, _v[:, :, None], _c, _s,
+                    offsets=_o, cap_slot=caps["slot"], cap_out=caps["out"],
+                )
+                return (rows, c), [ovf]
+
+            rows, c = self._with_retry(state.skey, op.round, caps, run)
+            routed.append((["#cell", x], rows, c))
+
+        state.routed = routed
+
+    def _lower_local_join(self, program, state, op) -> None:
+        """Communication-free output: all fragments of a virtual cell live on
+        device cell % p, so the per-cell join is a chain of colocated joins on
+        the cell column — shared attributes equality-filtered via dup_pairs,
+        disconnected components and CP lists combined as in-cell cartesian
+        factors.  Each result tuple materializes on exactly one device."""
         from ..dataplane.exchange import unblockify
-        from ..dataplane.join import sharded_intersect, sharded_join_step, sharded_semijoin
+        from ..dataplane.join import sharded_colocated_join
 
-        mesh, axis, p = self.mesh, self.axis_name, self.p
-        plan = st.plan
-        skey = (st.hkey, st.ekey)
-
-        def cap_for(n_total: int) -> int:
-            return max(16, self.slack * (-(-max(1, n_total) // p))) * caps_scale
-
-        overflow = 0
-
-        # HashPartition lowering: intersect unary pieces per border attribute.
-        piece_blocks: Dict[Attr, Tuple] = {}
-        for x, staged in piece_staged.items():
-            cap = cap_for(max(n for _, _, n in staged))
-            vals, cnts, ovf = sharded_intersect(
-                mesh, axis,
-                [(bv, bc) for bv, bc, _ in staged],
-                salt=_salt(skey, x),
-                cap_slot=cap, cap_out=cap,
-            )
-            overflow += int(np.asarray(ovf).sum())
-            if int(np.asarray(cnts).sum()) == 0:
-                return np.zeros((0, len(program.out_cols)), np.int64), overflow > 0
-            piece_blocks[x] = (vals, cnts)
-
-        # SemiJoin lowering: filter each light edge against the co-located pieces.
-        staged_edges = []   # (scheme, blocks, counts)
-        for scheme, blocks, cnts, n_rows in light_staged:
-            filters = []
-            for col, attr in enumerate(scheme):
-                if attr in piece_blocks:
-                    pv, pc = piece_blocks[attr]
-                    filters.append((col, _salt(skey, attr), pv, pc))
-            if filters:
-                cap = cap_for(n_rows)
-                blocks, cnts, ovf = sharded_semijoin(
-                    mesh, axis, blocks, cnts, filters, cap_slot=cap, cap_out=cap
-                )
-                overflow += int(np.asarray(ovf).sum())
-                if int(np.asarray(cnts).sum()) == 0:
-                    return np.zeros((0, len(program.out_cols)), np.int64), overflow > 0
-            staged_edges.append((list(scheme), blocks, cnts))
-
-        # LocalJoin lowering: left-deep chain of distributed join steps.
-        remaining = list(staged_edges)
-        scheme, blocks, cnts = remaining.pop(0)
-        while remaining:
-            j = next(
-                (i for i, (s, _, _) in enumerate(remaining) if set(s) & set(scheme)),
-                None,
-            )
-            if j is None:
-                raise DataplaneUnsupported(
-                    f"stage H={st.hkey}: disconnected light subquery needs the "
-                    "CP grid — use SimulatorExecutor"
-                )
-            b_scheme, b_blocks, b_cnts = remaining.pop(j)
-            common = [a for a in scheme if a in b_scheme]
-            key = common[0]
-            ka, kb = scheme.index(key), b_scheme.index(key)
+        if state.routed is None:
+            raise DataplaneUnsupported("LocalJoin before GridRoute")
+        parts = list(state.routed)
+        scheme, blocks, cnts = parts.pop(0)
+        while parts:
+            b_scheme, b_blocks, b_cnts = parts.pop(0)
+            common = [a for a in scheme[1:] if a in b_scheme]
             dup_pairs = tuple(
-                (scheme.index(a), b_scheme.index(a)) for a in common[1:]
+                (scheme.index(a), b_scheme.index(a)) for a in common
             )
             n_a = int(np.asarray(cnts).sum())
             n_b = int(np.asarray(b_cnts).sum())
-            cap = cap_for(max(n_a, n_b))
-            cap_out = cap_for(4 * (n_a + n_b))
-            blocks, cnts, ovf = sharded_join_step(
-                mesh, axis, blocks, cnts, b_blocks, b_cnts, ka, kb,
-                cap_slot=cap, cap_mid=2 * cap, cap_out=cap_out,
-                dup_pairs=dup_pairs, salt=_salt(skey, "join", key),
-            )
-            overflow += int(np.asarray(ovf).sum())
-            b_keep = [a for i, a in enumerate(b_scheme) if i != kb]
-            for _, bc in dup_pairs:
-                b_keep.remove(b_scheme[bc])
-            scheme = scheme + b_keep
+            caps = {"out": self._cap(4 * (n_a + n_b))}
 
-        if overflow:
-            return np.zeros((0, len(program.out_cols)), np.int64), True
+            def run(caps, attempt, _a=blocks, _ac=cnts, _b=b_blocks, _bc=b_cnts,
+                    _dp=dup_pairs):
+                out, c, ovf = sharded_colocated_join(
+                    self.mesh, self.axis_name, _a, _ac, _b, _bc, 0, 0,
+                    cap_out=caps["out"], dup_pairs=_dp,
+                )
+                return (out, c), [ovf]
 
-        rows = unblockify(blocks, cnts)
-        # append the η constants and permute to the program's output order
-        for a in plan.h_set:
+            blocks, cnts = self._with_retry(state.skey, op.round, caps, run)
+            scheme = scheme + [
+                a for i, a in enumerate(b_scheme) if i != 0 and a not in common
+            ]
+
+        state.n_out = int(np.asarray(cnts).sum())
+        if not self._materialize or state.n_out == 0:
+            return
+        rows = unblockify(blocks, cnts)[:, 1:]     # drop the cell column
+        out_scheme = scheme[1:]
+        for a in state.stage.plan.h_set:
             rows = np.concatenate(
-                [rows, np.full((rows.shape[0], 1), st.cfg.eta.value(a), np.int64)],
+                [
+                    rows,
+                    np.full(
+                        (rows.shape[0], 1), state.stage.cfg.eta.value(a), np.int64
+                    ),
+                ],
                 axis=1,
             )
-            scheme = scheme + [a]
-        perm = [scheme.index(a) for a in program.out_cols]
-        return rows[:, perm], False
+            out_scheme = out_scheme + [a]
+        perm = [out_scheme.index(a) for a in program.out_cols]
+        state.rows = rows[:, perm]

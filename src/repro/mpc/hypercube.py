@@ -62,6 +62,50 @@ def uniform_lp_shares(g: Hypergraph, p: int) -> Dict[Attr, int]:
     return shares
 
 
+def hc_cell_contribs(
+    attrs: Sequence[Attr], dims: Sequence[int], fixed_attrs: Sequence[Attr]
+) -> Tuple[Dict[Attr, int], Tuple[int, ...]]:
+    """Static (host-side) half of `cells_for`: the flat-cell stride of every
+    fixed attribute plus the flat contribution of every combination of the
+    free dimensions.  Shared by the numpy and the jnp routing paths so both
+    enumerate the exact same cells."""
+    attrs = tuple(attrs)
+    dims = tuple(dims)
+    fixed = set(fixed_attrs)
+    strides: Dict[Attr, int] = {}
+    for ai, a in enumerate(attrs):
+        if a in fixed:
+            strides[a] = math.prod(dims[ai + 1:]) if ai + 1 < len(dims) else 1
+    free_dims = [d for a, d in zip(attrs, dims) if a not in fixed]
+    n_free = math.prod(free_dims) if free_dims else 1
+    contribs = np.zeros((n_free,), dtype=np.int64)
+    if free_dims:
+        grid = np.indices(free_dims).reshape(len(free_dims), -1).T
+        j = 0
+        for ai, a in enumerate(attrs):
+            if a in fixed:
+                continue
+            s = math.prod(dims[ai + 1:]) if ai + 1 < len(dims) else 1
+            contribs += grid[:, j] * s
+            j += 1
+    return strides, tuple(int(c) for c in contribs)
+
+
+def hc_cells_dev(fixed_coords, free_contribs: Sequence[int], n: int):
+    """jnp cell enumeration from already-fixed coordinates: ``fixed_coords``
+    is a sequence of (traced (n,) coordinate array, static flat stride) pairs,
+    ``free_contribs`` the flat ids of the free-dimension combos.  Returns
+    (n, n_free) flat cells.  The single device-side implementation — both
+    `HyperCubeGrid.cells_for_dev` and the dataplane GridRoute lowering call
+    it, so route math cannot diverge from the grid geometry."""
+    import jax.numpy as jnp
+
+    flat = jnp.zeros((n,), dtype=jnp.int32)
+    for coord, stride in fixed_coords:
+        flat = flat + coord.astype(jnp.int32) * stride
+    return flat[:, None] + jnp.asarray(free_contribs, dtype=jnp.int32)[None, :]
+
+
 class HyperCubeGrid:
     """Mixed-radix cell indexing over an ordered attribute list."""
 
@@ -69,6 +113,9 @@ class HyperCubeGrid:
         self.attrs = tuple(attrs)
         self.dims = tuple(int(shares[a]) for a in self.attrs)
         self.size = math.prod(self.dims) if self.dims else 1
+
+    def share(self, attr: Attr) -> int:
+        return self.dims[self.attrs.index(attr)]
 
     def cells_for(self, fixed: Dict[Attr, np.ndarray]) -> np.ndarray:
         """Vectorized: given per-attribute fixed coordinates (arrays of equal length n)
@@ -94,6 +141,18 @@ class HyperCubeGrid:
             else:
                 flat += combos[:, ai].reshape(1, -1) * stride
         return flat
+
+    def cells_for_dev(self, fixed: Dict[Attr, "jax.Array"]) -> "jax.Array":  # noqa: F821
+        """jnp twin of `cells_for` for device-side routing: the per-attribute
+        coordinates in ``fixed`` are traced (n,) int arrays, the grid structure
+        is static.  Returns (n, n_free_combos) flat cell ids identical to the
+        numpy version — delegates to `hc_cells_dev`, the same function the
+        dataplane GridRoute lowering traces."""
+        strides, contribs = hc_cell_contribs(self.attrs, self.dims, tuple(fixed))
+        n = next(iter(fixed.values())).shape[0] if fixed else 1
+        return hc_cells_dev(
+            [(coord, strides[a]) for a, coord in fixed.items()], contribs, n
+        )
 
 
 def route_hypercube(

@@ -372,6 +372,22 @@ class StageGeometry:
     step3_group: Optional[MachineGroup] = None
     skip: bool = False
 
+    # -- Lemma 3.2 composition (shared by every backend) ---------------------
+
+    @property
+    def hc_size(self) -> int:
+        return self.hc_grid.size if self.hc_grid else 1
+
+    @property
+    def cp_size(self) -> int:
+        return self.grid.size if self.grid else 1
+
+    def cell(self, cp_cell: int, hc_cell: int) -> int:
+        """Virtual machine id of (CP row, HyperCube column): the Lemma 3.2
+        matrix flattened row-major.  Both executors route through this one
+        composition rule."""
+        return cp_cell * self.hc_size + hc_cell
+
 
 def stage_geometry(
     program: RoundProgram,

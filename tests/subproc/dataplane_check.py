@@ -17,6 +17,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 from repro.core.query import (  # noqa: E402
     JoinQuery,
     Relation,
+    disconnected_query,
+    hub_star_query,
     hub_triangle_query,
     reference_join,
 )
@@ -119,6 +121,52 @@ def check_program_light_subquery():
     )
 
 
+def check_program_cp_grid():
+    """Acceptance: a CP-grid program on 8 real devices — the planted-hub star
+    isolates every leaf under H={X0} (no light edges survive), so the stage
+    runs entirely through the Lemma 3.1 grid route + per-cell cartesian
+    LocalJoin.  The dataplane must match the simulator exactly."""
+    q = hub_star_query(n=60, hub_n=30, dom_size=25)
+    stats = compute_stats(q, lam=10)
+    program = compile_plan(q, stats, p=8)
+    cp_stages = [st for st in program.stages if st.plan.isolated]
+    assert cp_stages, "hub star must produce CP-grid stages"
+
+    res = DataplaneExecutor().run(program)
+    sim_res = SimulatorExecutor(p=8).run(program)
+    oracle = reference_join(q)
+    assert res.count == sim_res.count == len(oracle), (res.count, sim_res.count)
+    assert res.per_h_counts == sim_res.per_h_counts
+    assert sorted(map(tuple, res.rows.tolist())) == sorted(
+        map(tuple, sim_res.rows.tolist())
+    )
+    print(
+        f"[ok] dataplane executor, CP-grid program: {res.count} tuples, "
+        f"{len(cp_stages)} isolated-attribute stage(s) match oracle + simulator"
+    )
+
+
+def check_program_disconnected_light():
+    """Acceptance: a disconnected light subquery (A,B) ⋈ (C,D) — formerly the
+    second DataplaneUnsupported escape hatch — runs as an in-cell cartesian
+    across HyperCube components."""
+    q = disconnected_query(80, dom_size=12, seed=5)
+    stats = compute_stats(q, lam=4)
+    program = compile_plan(q, stats, p=8)
+    res = DataplaneExecutor().run(program)
+    sim_res = SimulatorExecutor(p=8).run(program)
+    oracle = reference_join(q)
+    assert res.count == sim_res.count == len(oracle), (res.count, sim_res.count)
+    assert res.per_h_counts == sim_res.per_h_counts
+    assert sorted(map(tuple, res.rows.tolist())) == sorted(
+        map(tuple, sim_res.rows.tolist())
+    )
+    print(
+        f"[ok] dataplane executor, disconnected light subquery: {res.count} "
+        "tuples match oracle + simulator"
+    )
+
+
 def check_decode_attn():
     rng = np.random.default_rng(1)
     b, h, kv, hd, s = 2, 8, 4, 16, 64
@@ -169,6 +217,8 @@ if __name__ == "__main__":
     check_join()
     check_program_binary_join()
     check_program_light_subquery()
+    check_program_cp_grid()
+    check_program_disconnected_light()
     check_decode_attn()
     check_hierarchical_grad_sync()
     check_pipeline()

@@ -1,0 +1,220 @@
+"""Executor parity: DataplaneExecutor ≡ SimulatorExecutor on every compiled program.
+
+The acceptance bar of the per-op dataplane lowering: for any program
+`compile_plan` emits — including stages with isolated attributes (Lemma 3.1
+CP grid), multi-dimensional isolated sets, and disconnected light subqueries —
+the device backend must reproduce the simulator's join count, per-H counts
+(including the zero entries of stages that ran but produced nothing), and the
+sorted result-row multiset.  Inputs are seeded Zipf-skewed so heavy values
+actually exist and the taxonomy fans out into many (H, η) stages.
+
+Also covers the overflow-retry contract: output overflow scales only the
+output capacity (routing buffers untouched), and slot retries re-randomize
+the routing salts (fresh randomness per attempt).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.query import (
+    JoinQuery,
+    Relation,
+    disconnected_query,
+    hub_star_query,
+    random_query,
+    reference_join,
+)
+from repro.core.taxonomy import compute_stats
+from repro.mpc.cartesian import CartesianGrid
+from repro.mpc.executors import DataplaneExecutor, SimulatorExecutor, _salt
+from repro.mpc.hypercube import HyperCubeGrid
+from repro.mpc.program import compile_plan, fuse_semijoin_pass
+
+
+def assert_parity(q: JoinQuery, lam: int, p: int = 8, fused: bool = False):
+    """Compile once, run both backends, compare against each other + oracle."""
+    stats = compute_stats(q, lam)
+    program = compile_plan(q, stats, p)
+    if fused:
+        program = fuse_semijoin_pass(program)
+    sim = SimulatorExecutor(p=p).run(program)
+    dp = DataplaneExecutor().run(program)
+    oracle = reference_join(q)
+    assert sim.count == len(oracle), "simulator must match the oracle"
+    assert dp.count == sim.count, (dp.count, sim.count)
+    assert dp.per_h_counts == sim.per_h_counts, (dp.per_h_counts, sim.per_h_counts)
+    assert sorted(map(tuple, dp.rows.tolist())) == sorted(
+        map(tuple, sim.rows.tolist())
+    )
+    return program, sim, dp
+
+
+# ---------------------------------------------------------------------------
+# Randomized seeded parity across query families (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_parity_triangle_zipf_isolated_stages():
+    """Skewed triangle: H with two heavy attrs leaves the third attribute
+    isolated (CP grid with hc_size = 1), alongside cyclic light stages."""
+    q = random_query(
+        np.random.default_rng(2), "clique", 3, tuples_per_rel=200, dom_size=30,
+        skew=2.0,
+    )
+    program, _, _ = assert_parity(q, lam=16)
+    assert any(st.plan.isolated for st in program.stages), (
+        "triangle taxonomy must exercise isolated attributes"
+    )
+
+
+def test_parity_four_cycle_2d_isolated_grid():
+    """Skewed 4-cycle: H = two opposite attributes isolates the other two —
+    a genuinely multi-dimensional Lemma 3.1 grid."""
+    q = random_query(
+        np.random.default_rng(7), "cycle", 4, tuples_per_rel=120, dom_size=10,
+        skew=2.5,
+    )
+    program, _, _ = assert_parity(q, lam=24)
+    assert any(len(st.plan.isolated) >= 2 for st in program.stages), (
+        "4-cycle taxonomy must exercise a >=2-dimensional CP grid"
+    )
+
+
+def test_parity_hub_star_isolated_only():
+    """Planted heavy hub on a star: under H = {hub} every leaf is isolated and
+    no light edges survive — the pure-CP-grid stage the dataplane formerly
+    rejected with DataplaneUnsupported."""
+    q = hub_star_query(n=48, hub_n=24, dom_size=25)
+    program, _, _ = assert_parity(q, lam=10)
+    assert any(
+        st.plan.isolated and not st.plan.light_edges for st in program.stages
+    ), "hub star must produce a light-edge-free CP-grid stage"
+
+
+def test_parity_disconnected_light_subquery():
+    """Two skewed components (A,B) ⋈ (C,D): the H = ∅ light subquery is
+    disconnected (the second former DataplaneUnsupported escape hatch), and
+    heavy values produce stages mixing an isolated attribute with a light
+    component."""
+    q = disconnected_query(90, dom_size=12, skew=1.8)
+    program, _, _ = assert_parity(q, lam=8)
+    h_empty = [st for st in program.stages if st.hkey == ()]
+    assert h_empty and len(h_empty[0].plan.light_edges) == 2, (
+        "H=∅ stage must carry the disconnected light subquery"
+    )
+
+
+def test_parity_fused_program():
+    """The fused semi-join rewrite changes the op list, not the executor: the
+    per-op dispatch lowers SemiJoin[fused-*] through the same rule."""
+    q = random_query(
+        np.random.default_rng(4), "star", 4, tuples_per_rel=150, dom_size=12,
+        skew=1.5,
+    )
+    program, _, _ = assert_parity(q, lam=3, fused=True)
+    assert program.fused
+
+
+# ---------------------------------------------------------------------------
+# Overflow-retry contract (satellites: split channels + fresh randomness)
+# ---------------------------------------------------------------------------
+
+
+def test_output_only_overflow_scales_cap_out_not_routing():
+    """A high-fanout join forces the LocalJoin output estimate to overflow
+    while every routing buffer fits: the retry must scale only cap_out.  Runs
+    on a 1-device mesh so routing-slot overflow is impossible by construction
+    — any retry the log records is a pure output-capacity retry."""
+    import jax
+
+    a = np.stack(
+        [np.repeat(np.arange(100), 2), np.tile(np.arange(2), 100)], axis=1
+    )
+    b = np.stack(
+        [np.tile(np.arange(2), 100), 1000 + np.repeat(np.arange(100), 2)], axis=1
+    )
+    q = JoinQuery.make(
+        [Relation.make(("A", "B"), a), Relation.make(("B", "C"), b)]
+    )
+    stats = compute_stats(q, lam=2)   # threshold m/2: no heavy values
+    program = compile_plan(q, stats, p=8)
+    mesh = jax.make_mesh((1,), ("join",))
+    ex = DataplaneExecutor(mesh=mesh)
+    res = ex.run(program)
+    oracle = reference_join(q)
+    assert res.count == len(oracle) == 20_000
+    assert sorted(map(tuple, res.rows.tolist())) == sorted(
+        map(tuple, oracle.data.tolist())
+    )
+    assert res.retries >= 1, "the output estimate must have been exceeded"
+    assert all(kind == "out" for _, _, kind in res.retry_log), res.retry_log
+    assert any(rnd == "output" for _, rnd, _ in res.retry_log), res.retry_log
+
+
+def test_retry_harness_scales_only_overflowed_channel():
+    """Unit-level: _with_retry doubles 'out' on output overflow and leaves the
+    routing capacities untouched (and vice versa)."""
+    ex = DataplaneExecutor.__new__(DataplaneExecutor)   # no mesh needed
+    ex.max_retries = 4
+    ex._retries, ex._retry_log = 0, []
+
+    seen = []
+
+    def run_out_overflow(caps, attempt):
+        seen.append(dict(caps))
+        ovf = np.array([[0, 1]] if len(seen) == 1 else [[0, 0]])
+        return ("ok", attempt), [ovf]
+
+    result = ex._with_retry(("k",), "output", {"slot": 16, "mid": 32, "out": 64}, run_out_overflow)
+    assert result == ("ok", 1)
+    assert seen == [
+        {"slot": 16, "mid": 32, "out": 64},
+        {"slot": 16, "mid": 32, "out": 128},   # only 'out' doubled
+    ]
+    assert ex._retry_log == [(("k",), "output", "out")]
+
+    seen.clear()
+    ex._retry_log.clear()
+
+    def run_slot_overflow(caps, attempt):
+        seen.append(dict(caps))
+        ovf = np.array([[1, 0]] if len(seen) == 1 else [[0, 0]])
+        return "ok", [ovf]
+
+    ex._with_retry(("k",), "step1", {"slot": 16, "mid": 32, "out": 64}, run_slot_overflow)
+    assert seen[1] == {"slot": 32, "mid": 64, "out": 64}   # 'out' untouched
+
+
+def test_salt_is_wide_and_attempt_threaded():
+    """The routing salt spans the full 31-bit range (beyond the old 2^20) and
+    a retry draws a fresh value — the paper's per-attempt randomness."""
+    salts = {_salt("stage", i) for i in range(2000)}
+    assert max(salts) >= 1 << 20, "salt range must exceed the old 2^20 cap"
+    assert len(salts) == 2000
+    assert _salt("k", attempt=0) != _salt("k", attempt=1)
+    # stability: same key + attempt ⇒ same salt on every host
+    assert _salt("k", 3, attempt=2) == _salt("k", 3, attempt=2)
+
+
+# ---------------------------------------------------------------------------
+# Device grid math ≡ host grid math (the geometry the route relies on)
+# ---------------------------------------------------------------------------
+
+
+def test_grid_coordinate_functions_match_numpy():
+    import jax.numpy as jnp
+
+    g = CartesianGrid([50, 30, 7], 16)
+    ids = np.arange(87, dtype=np.int64)
+    for li in range(g.t_prime):
+        want = g.cells_for_ids(li, ids)
+        got = np.asarray(g.cells_for_ids_dev(li, jnp.asarray(ids, jnp.int32)))
+        assert np.array_equal(want, got)
+
+    hc = HyperCubeGrid(("A", "B", "C"), {"A": 3, "B": 2, "C": 4})
+    fixed = {"A": np.array([0, 1, 2, 0, 2]), "C": np.array([3, 2, 1, 0, 3])}
+    want = hc.cells_for(fixed)
+    got = np.asarray(
+        hc.cells_for_dev({k: jnp.asarray(v, jnp.int32) for k, v in fixed.items()})
+    )
+    assert np.array_equal(want, got)
