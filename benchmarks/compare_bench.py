@@ -1,0 +1,130 @@
+"""Diff the latest two BENCH_program_backends.json snapshots.
+
+Prints a per-case table of warm/cold wall-clock and retry deltas between the
+two most recent snapshots appended by ``bench_program_backends`` and exits
+non-zero when any case's *warm* time regressed beyond the threshold — the CI
+regression gate for the stage-batched dataplane scheduler.
+
+Warm time is the gate (it is the steady-state figure of merit and the least
+noisy); cold time and retries are reported for context only, since cold is
+dominated by XLA compile times that vary across machines.  Warm comparisons
+are only meaningful between snapshots from the *same machine* — the CI job
+produces both snapshots on one runner (base ref, then head ref) instead of
+diffing against a committed snapshot from developer hardware.
+
+    PYTHONPATH=src python benchmarks/compare_bench.py [--threshold 0.25]
+        [--results PATH] [--strict]
+
+Exit status: 0 = no warm regression beyond threshold (or, without --strict,
+nothing to gate), 1 = regression detected, 2 = --strict and the results file
+is missing/unreadable or holds fewer than two snapshots (a broken benchmark
+pipeline must not pass as green).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_RESULTS = Path(__file__).resolve().parents[1] / "BENCH_program_backends.json"
+
+
+def load_snapshots(path: Path):
+    try:
+        history = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"compare_bench: cannot read {path}: {e}")
+        return []
+    if not isinstance(history, list):
+        history = [history]
+    return [s for s in history if s.get("bench") == "program_backends"]
+
+
+def index_cases(snapshot):
+    return {c["case"]: c for c in snapshot.get("cases", [])}
+
+
+def fmt_us(us: float) -> str:
+    return f"{us / 1e3:10.1f}ms"
+
+
+def compare(prev, curr, threshold: float):
+    """Return (lines, regressions, dropped) comparing two snapshots case by
+    case; ``dropped`` lists baseline cases missing from the latest snapshot
+    (lost benchmark coverage — a gate failure in strict mode)."""
+    prev_cases, curr_cases = index_cases(prev), index_cases(curr)
+    lines = [
+        f"{'case':<16} {'warm prev':>12} {'warm now':>12} {'Δwarm':>8} "
+        f"{'cold prev':>12} {'cold now':>12} {'Δcold':>8} {'retries':>9}"
+    ]
+    regressions = []
+    for name, cur in curr_cases.items():
+        old = prev_cases.get(name)
+        if old is None:
+            lines.append(f"{name:<16} (new case — no baseline)")
+            continue
+        wp, wn = old["dataplane_warm_us"], cur["dataplane_warm_us"]
+        cp, cn = old["dataplane_cold_us"], cur["dataplane_cold_us"]
+        dwarm = (wn - wp) / max(wp, 1.0)
+        dcold = (cn - cp) / max(cp, 1.0)
+        lines.append(
+            f"{name:<16} {fmt_us(wp)} {fmt_us(wn)} {dwarm:+7.0%} "
+            f"{fmt_us(cp)} {fmt_us(cn)} {dcold:+7.0%} "
+            f"{old['dataplane_retries']:>4}→{cur['dataplane_retries']}"
+        )
+        if dwarm > threshold:
+            regressions.append((name, dwarm))
+    dropped = sorted(prev_cases.keys() - curr_cases.keys())
+    for name in dropped:
+        lines.append(f"{name:<16} (dropped from latest snapshot)")
+    return lines, regressions, dropped
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", type=Path, default=DEFAULT_RESULTS)
+    ap.add_argument(
+        "--threshold", type=float, default=0.25,
+        help="max tolerated relative warm-time regression per case (0.25 = +25%%)",
+    )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="fail (exit 2) when there are not two snapshots to diff — in CI "
+        "a missing baseline means the benchmark pipeline is broken, not green",
+    )
+    args = ap.parse_args(argv)
+
+    snapshots = load_snapshots(args.results)
+    if len(snapshots) < 2:
+        print(
+            f"compare_bench: {len(snapshots)} snapshot(s) in {args.results.name} "
+            "— need two to diff; nothing to gate."
+        )
+        return 2 if args.strict else 0
+    prev, curr = snapshots[-2], snapshots[-1]
+    print(
+        f"comparing snapshot {len(snapshots) - 1} (devices={prev.get('device_count')}) "
+        f"→ {len(snapshots)} (devices={curr.get('device_count')}) "
+        f"of {args.results.name}"
+    )
+    lines, regressions, dropped = compare(prev, curr, args.threshold)
+    print("\n".join(lines))
+    if regressions:
+        for name, dwarm in regressions:
+            print(
+                f"REGRESSION: {name} warm time +{dwarm:.0%} "
+                f"(threshold +{args.threshold:.0%})"
+            )
+        return 1
+    if args.strict and dropped:
+        # lost coverage must not read as "no regression"
+        print(f"REGRESSION: cases dropped from the latest snapshot: {dropped}")
+        return 1
+    print(f"no warm-time regression beyond +{args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,7 +27,18 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels.ops import hash_partition
+from ..kernels.ops import hash_partition, probe_use_pallas
+
+
+def _partition_ids(keys: jax.Array, n_parts: int) -> jax.Array:
+    """Partition id per key: the hash_partition Pallas kernel on TPU, its
+    bit-identical jnp mix elsewhere (the interpreter would only emulate the
+    kernel at a large trace-size cost; equality is asserted in tests)."""
+    if probe_use_pallas():
+        return hash_partition(keys, n_parts)[0]
+    from ..kernels.ref import hash_u32_ref
+
+    return (hash_u32_ref(keys) % jnp.uint32(n_parts)).astype(jnp.int32)
 
 
 @dataclass
@@ -46,10 +57,12 @@ def _valid_mask(cap: int, count: jax.Array) -> jax.Array:
     return jnp.arange(cap) < count
 
 
-def blockify(rows, p: int, cap: Optional[int] = None):
+def blockify(rows, p: int, cap: Optional[int] = None, to_device: bool = True):
     """Host-side staging: split an (n, w) numpy array into evenly-spread
     per-device blocks.  Returns (blocks (p, cap, w) int32, counts (p,) int32).
-    Values must fit int32 (the device word contract; INT32_MAX is reserved)."""
+    Values must fit int32 (the device word contract; INT32_MAX is reserved).
+    ``to_device=False`` keeps the blocks as numpy — the stage-batched
+    scheduler stacks many stages host-side and ships one buffer per bucket."""
     import numpy as np
 
     rows = np.asarray(rows)
@@ -69,6 +82,8 @@ def blockify(rows, p: int, cap: Optional[int] = None):
         part = rows[i * per : (i + 1) * per]
         blocks[i, : len(part)] = part
         counts[i] = len(part)
+    if not to_device:
+        return blocks, counts
     return jnp.asarray(blocks), jnp.asarray(counts)
 
 
@@ -148,6 +163,66 @@ def exchange_by_partition(
     return out, count_out, ovf_slot, ovf_out
 
 
+def batched_exchange_by_partition(
+    rows: jax.Array,
+    counts: jax.Array,
+    part: jax.Array,
+    axis_name: str,
+    n_parts: int,
+    cap_slot: int,
+    cap_out: int,
+):
+    """Inside shard_map: the stage-batched twin of `exchange_by_partition`.
+
+    ``rows`` (s, cap, w), ``counts`` (s,), ``part`` (s, cap): s independent
+    stages share **one** ``all_to_all`` — the pack/compact halves are vmapped
+    over the stage axis and the send buffers ride the collective stacked, so a
+    whole geometry bucket costs a single dispatch instead of s.  Returns
+    (rows_out (s, cap_out, w), counts_out (s,), ovf_slot (s,), ovf_out (s,))
+    — per-stage overflow so the retry can re-run only the stages that
+    tripped."""
+    s = rows.shape[0]
+    send, send_counts, ovf_slot = jax.vmap(
+        pack_by_partition, in_axes=(0, 0, 0, None, None)
+    )(rows, counts, part, n_parts, cap_slot)
+    recv = jax.lax.all_to_all(
+        send, axis_name, split_axis=1, concat_axis=1, tiled=False
+    )
+    recv_counts = jax.lax.all_to_all(
+        send_counts.reshape(s, n_parts, 1),
+        axis_name, split_axis=1, concat_axis=1, tiled=False,
+    ).reshape(s, n_parts)
+    out, count_out, ovf_out = jax.vmap(compact, in_axes=(0, 0, None))(
+        recv, recv_counts, cap_out
+    )
+    return out, count_out, ovf_slot, ovf_out
+
+
+def batched_hash_exchange(
+    rows: jax.Array,
+    counts: jax.Array,
+    key_col: int,
+    axis_name: str,
+    n_parts: int,
+    cap_slot: int,
+    cap_out: int,
+    offs: jax.Array,
+):
+    """Inside shard_map: stage-batched `hash_exchange` — s stages exchanged by
+    hash(key + per-stage offset) through one collective.  ``offs`` (s,) holds
+    the per-stage traced salt offsets (`salt_offset`), so stages with
+    different routing salts still share the executable.  Returns
+    (rows_out (s, cap_out, w), counts (s,), ovf_slot (s,), ovf_out (s,))."""
+    s, cap, _ = rows.shape
+    keys = rows[:, :, key_col].astype(jnp.int32) + offs[:, None].astype(jnp.int32)
+    # the partition hash is per-key, so the flattened batch partitions
+    # identically to s separate calls (the unbatched path's exact function).
+    part = _partition_ids(keys.reshape(s * cap), n_parts)
+    return batched_exchange_by_partition(
+        rows, counts, part.reshape(s, cap), axis_name, n_parts, cap_slot, cap_out
+    )
+
+
 def hash_exchange(
     rows: jax.Array,
     count: jax.Array,
@@ -168,5 +243,5 @@ def hash_exchange(
     else:
         off = salt.astype(jnp.int32)
     keys = rows[:, key_col].astype(jnp.int32) + off
-    part, _ = hash_partition(keys, n_parts)
+    part = _partition_ids(keys, n_parts)
     return exchange_by_partition(rows, count, part, axis_name, n_parts, cap_slot, cap_out)

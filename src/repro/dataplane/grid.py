@@ -41,9 +41,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..mpc.cartesian import CartesianGrid, cp_cells_dev
+from ..mpc.cartesian import CartesianGrid, cp_cell_contribs, cp_cells_dev
 from ..mpc.hypercube import HyperCubeGrid, hc_cell_contribs, hc_cells_dev
-from .exchange import exchange_by_partition
+from .exchange import batched_exchange_by_partition, exchange_by_partition
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +210,228 @@ def _hc_route_fn(mesh, axis_name, spec: HCRouteSpec, cap_slot, cap_out):
         out_specs=(P(axis_name, None, None), P(axis_name), P(axis_name, None)),
         check_rep=False,
     ))
+
+
+# ---------------------------------------------------------------------------
+# Stage-batched grid routing (one fused dispatch per geometry bucket)
+#
+# The batched twins make the *geometry itself* traced data: a stage's grid
+# dims, cell strides, and enumeration tables arrive as per-stage arrays
+# instead of compile-time constants, and the per-row copy count is padded to
+# a bucket-wide pow2 ``fanout`` with -1 sentinel entries (ghosted by the
+# exchange, never sent).  One compiled executable therefore serves *every*
+# stage whose route has the same static shape bundle — (fixed hash columns,
+# padded fanout, block caps) — no matter what CP grid or HyperCube shares the
+# broadcast sizes produced; cold time stops scaling with the number of
+# distinct stage geometries.
+#
+# The destination algebra is an exact refactoring of the unbatched
+# enumeration (same host helpers `cp_cell_contribs` / `hc_cell_contribs`,
+# same copy order):
+#
+#   CP side:  v = (id mod dim) · S + T_k,   S = stride·hc_size,
+#             T = [contrib_j·hc_size + h]   (j outer, h inner)
+#   HC side:  v = Σ_f coord_f·stride_f + T_k,
+#             T = [cp_row·hc_size + free_contrib_j]   (cp_row outer)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CPBatchSig:
+    """Static shape bundle of a batched CP-side route: only the padded
+    fanout — dims, strides, and tables are traced per-stage data."""
+
+    fanout: int
+
+
+@dataclass(frozen=True)
+class HCBatchSig:
+    """Static shape bundle of a batched HC-side route: which row columns are
+    hashed into coordinates, and the padded fanout."""
+
+    cols: Tuple[int, ...]
+    fanout: int
+
+
+def _pad_table(t, fanout: int):
+    """Pad a destination-offset table to ``fanout`` with -1 sentinels."""
+    import numpy as np
+
+    out = np.full((fanout,), -1, dtype=np.int32)
+    out[: len(t)] = t
+    return out
+
+
+def cp_batch_params(grid: Optional[CartesianGrid], list_idx: int, hc_size: int):
+    """Per-stage traced operands of the batched CP route for one isolated
+    list: (sig fanout source, dim, scale S, offset table T).  Lists beyond t'
+    broadcast to every CP cell (dim = 1, S = 0, T enumerates the full grid)."""
+    if grid is not None and list_idx < grid.t_prime:
+        stride, contribs = cp_cell_contribs(grid.dims, list_idx)
+        dim = grid.dims[list_idx]
+        scale = stride * hc_size
+        table = [c * hc_size + h for c in contribs for h in range(hc_size)]
+    else:
+        cp_size = grid.size if grid is not None else 1
+        dim, scale = 1, 0
+        table = [c * hc_size + h for c in range(cp_size) for h in range(hc_size)]
+    return dim, scale, table
+
+
+def hc_batch_params(grid: HyperCubeGrid, scheme: Sequence[str], cp_size: int):
+    """Per-stage traced operands of the batched HC route for one light
+    fragment: (fixed column indices, shares, strides, offset table T)."""
+    fixed_attrs = [a for a in scheme if a in grid.attrs]
+    strides, contribs = hc_cell_contribs(grid.attrs, grid.dims, fixed_attrs)
+    cols = tuple(list(scheme).index(a) for a in fixed_attrs)
+    shares = [grid.share(a) for a in fixed_attrs]
+    stride_list = [strides[a] for a in fixed_attrs]
+    table = [cp * grid.size + fc for cp in range(cp_size) for fc in contribs]
+    return cols, shares, stride_list, table
+
+
+def batched_replicate_to_cells(
+    rows: jax.Array,        # (s, cap, w) valid-prefix padded
+    counts: jax.Array,      # (s,)
+    dests: jax.Array,       # (s, cap, F) destination cells; -1 = sentinel copy
+    axis_name: str,
+    p: int,
+    cap_slot: int,
+    cap_out: int,
+):
+    """Inside shard_map: stage-batched `replicate_to_cells` — every stage's
+    rows are fanned out to their destination cells and the whole stack shares
+    one `all_to_all`.  Sentinel (-1) destinations are ghosted: the copy is
+    never sent, so pow2 fanout padding cannot change results or overflow.
+    Returns (out (s, cap_out, 1+w), counts (s,), ovf_slot (s,), ovf_out (s,))."""
+    s, cap, w = rows.shape
+    fanout = dests.shape[2]
+    rep = jnp.repeat(rows, fanout, axis=1)              # keeps prefix validity
+    v = dests.reshape(s, cap * fanout).astype(jnp.int32)
+    tagged = jnp.concatenate([v[:, :, None], rep], axis=2)
+    part = jnp.where(v < 0, p, v % p)                   # sentinel → ghost
+    return batched_exchange_by_partition(
+        tagged, counts * fanout, part, axis_name, p, cap_slot, cap_out
+    )
+
+
+@lru_cache(maxsize=512)
+def _batched_cp_route_fn(mesh, axis_name, sig: CPBatchSig, cap_slot, cap_out):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(rows, cnts, offs, dims, scales, table):
+        rows, cnt, off = rows[:, 0], cnts[:, 0], offs[:, 0]     # (s, cap, w) ...
+        s, cap, _ = rows.shape
+        ids = off[:, None].astype(jnp.int32) + jnp.arange(cap, dtype=jnp.int32)
+        own = (ids % dims[:, None]).astype(jnp.int32)
+        dests = own[:, :, None] * scales[:, None, None] + table[:, None, :]
+        dests = jnp.where(table[:, None, :] < 0, -1, dests)
+        out, c, o_s, o_o = batched_replicate_to_cells(
+            rows, cnt, dests, axis_name, p, cap_slot, cap_out
+        )
+        ovf = jnp.stack([o_s.astype(jnp.int32), o_o.astype(jnp.int32)], axis=-1)
+        return out[:, None], c[:, None], ovf[:, None, :]
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis_name, None, None), P(None, axis_name), P(None, axis_name),
+            P(None), P(None), P(None, None),
+        ),
+        out_specs=(
+            P(None, axis_name, None, None), P(None, axis_name), P(None, axis_name, None),
+        ),
+        check_rep=False,
+    ))
+
+
+@lru_cache(maxsize=512)
+def _batched_hc_route_fn(mesh, axis_name, sig: HCBatchSig, cap_slot, cap_out):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(rows, cnts, salts, shares, strides, table):
+        rows, cnt = rows[:, 0], cnts[:, 0]      # (s, cap, w); rest replicated
+        s, cap, _ = rows.shape
+        flat = jnp.zeros((s, cap), jnp.int32)
+        for f, col in enumerate(sig.cols):
+            coord = coord_hash(rows[:, :, col], salts[:, f, None]) % shares[:, f, None]
+            flat = flat + coord.astype(jnp.int32) * strides[:, f, None]
+        dests = flat[:, :, None] + table[:, None, :]
+        dests = jnp.where(table[:, None, :] < 0, -1, dests)
+        out, c, o_s, o_o = batched_replicate_to_cells(
+            rows, cnt, dests, axis_name, p, cap_slot, cap_out
+        )
+        ovf = jnp.stack([o_s.astype(jnp.int32), o_o.astype(jnp.int32)], axis=-1)
+        return out[:, None], c[:, None], ovf[:, None, :]
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis_name, None, None), P(None, axis_name),
+            P(None, None), P(None, None), P(None, None), P(None, None),
+        ),
+        out_specs=(
+            P(None, axis_name, None, None), P(None, axis_name), P(None, axis_name, None),
+        ),
+        check_rep=False,
+    ))
+
+
+def batched_sharded_grid_route(
+    mesh,
+    axis_name: str,
+    rows: jax.Array,            # (s, p, cap, w) stage-stacked padded blocks
+    counts: jax.Array,          # (s, p)
+    sig,                        # CPBatchSig | HCBatchSig (shared by the bucket)
+    *,
+    offsets=None,               # (s, p) global-id bases          (CP side)
+    dims=None,                  # (s,) own-list grid dimension    (CP side)
+    scales=None,                # (s,) stride · hc_size           (CP side)
+    salts=None,                 # (s, n_fixed) coordinate salts   (HC side)
+    shares=None,                # (s, n_fixed) attribute shares   (HC side)
+    strides=None,               # (s, n_fixed) flat-cell strides  (HC side)
+    table=None,                 # (s, sig.fanout) cell-offset table, -1-padded
+    cap_slot: int,
+    cap_out: int,
+    invoke: bool = True,
+):
+    """Stage-batched `sharded_grid_route`: every stage of a geometry bucket
+    is fanned out to its virtual cells through one dispatch and one
+    `all_to_all`; the grid geometry rides along as traced per-stage operands
+    (see `cp_batch_params` / `hc_batch_params`).  Returns
+    (out (s, p, cap_out, 1+w), counts (s, p), ovf (s, p, 2)); with
+    ``invoke=False`` returns ``(jitted_fn, args)`` for AOT compilation."""
+    import numpy as np
+
+    if isinstance(sig, CPBatchSig):
+        fn = _batched_cp_route_fn(mesh, axis_name, sig, cap_slot, cap_out)
+        args = (
+            rows, counts,
+            np.asarray(offsets, dtype=np.int32),
+            np.asarray(dims, dtype=np.int32),
+            np.asarray(scales, dtype=np.int32),
+            np.asarray(table, dtype=np.int32),
+        )
+    elif isinstance(sig, HCBatchSig):
+        fn = _batched_hc_route_fn(mesh, axis_name, sig, cap_slot, cap_out)
+        args = (
+            rows, counts,
+            np.asarray(salts, dtype=np.uint32),
+            np.asarray(shares, dtype=np.uint32),
+            np.asarray(strides, dtype=np.int32),
+            np.asarray(table, dtype=np.int32),
+        )
+    else:
+        raise TypeError(f"unknown grid-route signature {sig!r}")
+    if not invoke:
+        return fn, args
+    return fn(*args)
 
 
 def sharded_grid_route(

@@ -35,8 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..kernels.ops import merge_join_counts
-from .exchange import hash_exchange, salt_offset
+from ..kernels.ops import merge_join_counts, probe_use_pallas
+from .exchange import batched_hash_exchange, hash_exchange, salt_offset
 
 
 def local_sorted_join(
@@ -59,7 +59,7 @@ def local_sorted_join(
     a_k = a_keys[a_ord]
     b_k = b_keys[b_ord]
 
-    lower, upper = merge_join_counts(a_k, b_k)
+    lower, upper = merge_join_counts(a_k, b_k, use_pallas=probe_use_pallas())
     # sentinel keys must not match each other
     real_a = a_k < big
     counts = jnp.where(real_a, upper - lower, 0)
@@ -120,7 +120,7 @@ def local_semijoin(
     order = jnp.argsort(rk)
     rows_s, rk_s = rows[order], rk[order]
     kv = jnp.sort(jnp.where(jnp.arange(capk) < kcount, keys, big))
-    lower, upper = merge_join_counts(rk_s, kv)
+    lower, upper = merge_join_counts(rk_s, kv, use_pallas=probe_use_pallas())
     member = (upper > lower) & (rk_s < big)
     return _compact_prefix(rows_s, member)
 
@@ -359,6 +359,187 @@ def sharded_colocated_join(
     reproduces each cell's local join without moving a byte.  Returns
     (out (p, cap_out, w), counts (p,), overflow (p, 2) [always-0 slot, out])."""
     fn = _colocated_join_fn(mesh, axis_name, ka, kb, cap_out, tuple(dup_pairs))
+    return fn(a_global, a_counts, b_global, b_counts)
+
+
+# ---------------------------------------------------------------------------
+# Stage-batched twins (one fused dispatch per geometry bucket)
+#
+# Each `batched_sharded_*` takes the same operands as its per-stage twin with
+# one extra leading *stage* axis (s, p, ...) plus per-stage traced salts, and
+# performs the whole bucket in a single jitted shard_map call: local compute is
+# vmapped over the stage axis and the exchanges share one `all_to_all`
+# (`batched_hash_exchange`).  Overflow comes back per stage — (s, p, 2) with
+# the usual [slot, out] channels — so the executor's retry re-runs only the
+# stages that tripped, at doubled caps and fresh attempt salts.
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=512)
+def _batched_intersect_fn(mesh, axis_name, n, cap_slot, cap_out):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(offs, *flat):
+        s = offs.shape[0]                       # offs (s,) replicated
+        ovf_slot = jnp.zeros((s,), jnp.int32)
+        ovf_out = jnp.zeros((s,), jnp.int32)
+        cur = None
+        cur_cnt = None
+        for i in range(n):
+            v, c = flat[2 * i][:, 0, :], flat[2 * i + 1][:, 0]   # (s, cap_i), (s,)
+            ex, exc, o_s, o_o = batched_hash_exchange(
+                v[:, :, None], c, 0, axis_name, p, cap_slot, cap_out, offs
+            )
+            ovf_slot += o_s.astype(jnp.int32)
+            ovf_out += o_o.astype(jnp.int32)
+            uv, uc = jax.vmap(local_unique)(ex[:, :, 0], exc)
+            if cur is None:
+                cur, cur_cnt = uv, uc
+            else:
+                kept, kc = jax.vmap(local_semijoin, in_axes=(0, 0, None, 0, 0))(
+                    cur[:, :, None], cur_cnt, 0, uv, uc
+                )
+                cur, cur_cnt = kept[:, :, 0], kc
+        ovf = jnp.stack([ovf_slot, ovf_out], axis=-1)            # (s, 2)
+        return cur[:, None, :], cur_cnt[:, None], ovf[:, None, :]
+
+    specs = [P(None)]
+    for _ in range(n):
+        specs += [P(None, axis_name, None), P(None, axis_name)]
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=tuple(specs),
+        out_specs=(P(None, axis_name, None), P(None, axis_name), P(None, axis_name, None)),
+        check_rep=False,
+    ))
+
+
+def batched_sharded_intersect(
+    mesh,
+    axis_name: str,
+    pieces: Sequence[Tuple[jax.Array, jax.Array]],  # [(vals (s, p, cap_i), counts (s, p))]
+    offs: jax.Array,                                # (s,) per-stage salt offsets
+    cap_slot: int, cap_out: int,
+    invoke: bool = True,
+):
+    """Stage-batched `sharded_intersect`: s stages' R''_X intersections through
+    one dispatch.  Returns (vals (s, p, cap_out), counts (s, p), ovf (s, p, 2));
+    with ``invoke=False`` returns ``(jitted_fn, args)`` instead, so the
+    scheduler can AOT-compile distinct signatures concurrently and execute
+    serially (concurrent collective *executions* deadlock the rendezvous)."""
+    args = []
+    for pv, pc in pieces:
+        args += [pv, pc]
+    fn = _batched_intersect_fn(mesh, axis_name, len(pieces), cap_slot, cap_out)
+    if not invoke:
+        return fn, (offs, *args)
+    return fn(offs, *args)
+
+
+@lru_cache(maxsize=512)
+def _batched_semijoin_fn(mesh, axis_name, col, cap_slot, cap_out):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(rows, cnt, offs, pv, pc):
+        rows, cnt = rows[:, 0], cnt[:, 0]       # offs (s,) replicated
+        pv, pc = pv[:, 0], pc[:, 0]
+        rows, cnt, o_s, o_o = batched_hash_exchange(
+            rows, cnt, col, axis_name, p, cap_slot, cap_out, offs
+        )
+        rows, cnt = jax.vmap(local_semijoin, in_axes=(0, 0, None, 0, 0))(
+            rows, cnt, col, pv, pc
+        )
+        ovf = jnp.stack([o_s.astype(jnp.int32), o_o.astype(jnp.int32)], axis=-1)
+        return rows[:, None], cnt[:, None], ovf[:, None, :]
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis_name, None, None), P(None, axis_name), P(None),
+            P(None, axis_name, None), P(None, axis_name),
+        ),
+        out_specs=(
+            P(None, axis_name, None, None), P(None, axis_name), P(None, axis_name, None),
+        ),
+        check_rep=False,
+    ))
+
+
+def batched_sharded_semijoin(
+    mesh,
+    axis_name: str,
+    rows_global: jax.Array, counts: jax.Array,      # (s, p, cap, w), (s, p)
+    col: int,
+    offs: jax.Array,                                # (s,) piece-distribution offsets
+    piece_vals: jax.Array, piece_counts: jax.Array, # (s, p, capx), (s, p)
+    cap_slot: int, cap_out: int,
+    invoke: bool = True,
+):
+    """Stage-batched `sharded_semijoin` (single filter — the executor's shape):
+    every stage's rows are exchanged on ``col`` with its own pinned piece salt
+    and membership-filtered against its co-located piece, in one dispatch.
+    Returns (rows (s, p, cap_out, w), counts (s, p), ovf (s, p, 2)); with
+    ``invoke=False`` returns ``(jitted_fn, args)`` for AOT compilation."""
+    fn = _batched_semijoin_fn(mesh, axis_name, col, cap_slot, cap_out)
+    if not invoke:
+        return fn, (rows_global, counts, offs, piece_vals, piece_counts)
+    return fn(rows_global, counts, offs, piece_vals, piece_counts)
+
+
+@lru_cache(maxsize=512)
+def _batched_colocated_join_fn(mesh, axis_name, ka, kb, cap_out, dup_pairs):
+    from jax.experimental.shard_map import shard_map
+
+    def body(a_rows, a_cnt, b_rows, b_cnt):
+        out, cnt, ovf = jax.vmap(
+            partial(
+                local_join_filtered, ka=ka, kb=kb, cap_out=cap_out,
+                dup_pairs=dup_pairs,
+            )
+        )(a_rows[:, 0], a_cnt[:, 0], b_rows[:, 0], b_cnt[:, 0])
+        ovf2 = jnp.stack(
+            [jnp.zeros_like(ovf, jnp.int32), ovf.astype(jnp.int32)], axis=-1
+        )
+        return out[:, None], cnt[:, None], ovf2[:, None, :]
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis_name, None, None), P(None, axis_name),
+            P(None, axis_name, None, None), P(None, axis_name),
+        ),
+        out_specs=(
+            P(None, axis_name, None, None), P(None, axis_name), P(None, axis_name, None),
+        ),
+        check_rep=False,
+    ))
+
+
+def batched_sharded_colocated_join(
+    mesh,
+    axis_name: str,
+    a_global: jax.Array, a_counts: jax.Array,   # (s, p, capA, wa), (s, p)
+    b_global: jax.Array, b_counts: jax.Array,
+    ka: int, kb: int,
+    cap_out: int,
+    dup_pairs: Tuple[Tuple[int, int], ...] = (),
+    invoke: bool = True,
+):
+    """Stage-batched `sharded_colocated_join`: s communication-free per-cell
+    joins in one dispatch (vmapped `local_join_filtered`; the slot channel is
+    structurally zero).  Returns (out (s, p, cap_out, w), counts (s, p),
+    ovf (s, p, 2)); with ``invoke=False`` returns ``(jitted_fn, args)`` for
+    AOT compilation."""
+    fn = _batched_colocated_join_fn(mesh, axis_name, ka, kb, cap_out, tuple(dup_pairs))
+    if not invoke:
+        return fn, (a_global, a_counts, b_global, b_counts)
     return fn(a_global, a_counts, b_global, b_counts)
 
 

@@ -26,6 +26,7 @@ import hashlib
 import math
 from collections import defaultdict
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -571,7 +572,14 @@ class SimulatorExecutor:
 class DataplaneJoinResult:
     """Result of running a program on the device mesh.  ``rows`` is the full
     exactly-once result multiset (over sorted(attset)); there is no simulator,
-    so no metered load — wall-clock is the backend's figure of merit."""
+    so no metered load — wall-clock is the backend's figure of merit.
+
+    The scheduler-observability fields describe the stage-batched dispatch:
+    ``dispatches`` counts fused shard_map calls (one per (op, bucket, attempt)),
+    ``jit_cache_hits``/``jit_cache_misses`` meter the compiled-executable cache
+    (a miss ⇒ a fresh trace+compile; O(#buckets), not O(#stages)), and
+    ``bucket_stage_counts`` maps each op round to the per-dispatch batch sizes
+    — how many stages rode each fused call."""
 
     p: int
     count: int
@@ -580,6 +588,10 @@ class DataplaneJoinResult:
     retries: int = 0    # capacity-doubling retries triggered by overflow
     # one entry per retry: ((H, η), op round name, "slot" | "out" | "slot+out")
     retry_log: List[Tuple[Tuple, str, str]] = field(default_factory=list)
+    dispatches: int = 0
+    jit_cache_hits: int = 0
+    jit_cache_misses: int = 0
+    bucket_stage_counts: Dict[str, List[int]] = field(default_factory=dict)
 
 
 class DataplaneUnsupported(NotImplementedError):
@@ -623,11 +635,35 @@ class _StageState:
     piece_salt: Dict[Attr, int] = field(default_factory=dict)
     piece_n: Dict[Attr, int] = field(default_factory=dict)
     geo: Optional[StageGeometry] = None
-    routed: Optional[List] = None         # [(scheme incl. cell col, blocks, counts)]
+    routed: Optional[List] = None    # [(scheme incl. cell col, blocks, counts, n)]
+    parts: Optional[List] = None     # LocalJoin chain worklist
     n_out: int = 0
     rows: Optional[np.ndarray] = None
     empty: bool = False
     skip_count: bool = False
+
+
+@dataclass
+class _WorkItem:
+    """One schedulable unit of an op — a (stage, fragment) pair.
+
+    ``key`` is the static bucket signature: everything that shapes the
+    compiled executable except the capacities (op kind, route spec, input
+    block shapes).  Items sharing (key, caps) form one *geometry bucket* and
+    ride a single fused dispatch.  ``group`` is the retry unit: when any
+    member of a group overflows, every member re-runs at the next attempt
+    (fresh salts), but only the members whose own overflow tensor tripped get
+    their capacity doubled — HC grid routes group all light fragments of a
+    stage (their per-attribute salts must advance together), everything else
+    groups per fragment."""
+
+    state: _StageState
+    key: Tuple
+    caps: Dict[str, int]
+    payload: Dict
+    group: Tuple
+    attempt: int = 0
+    result: object = None
 
 
 class DataplaneExecutor:
@@ -660,11 +696,27 @@ class DataplaneExecutor:
                        equality-filtered, CP lists appended as per-cell
                        cartesian factors)
 
-    Overflow is detected (never dropped) per op and channel: a *slot*
-    overflow doubles the routing buffers and re-randomizes the routing salts
-    (fresh randomness per attempt, as in the paper); an *output* overflow
-    doubles only the output buffer — replacing the paper's 1/p^c failure
-    probability with deterministic retry.
+    Every primitive call is *stage-batched*: the executor collects one work
+    item per (stage, fragment), groups items into **geometry buckets** —
+    identical static signature: op kind, route spec, input block shapes, and
+    pow2-padded capacities — stacks each bucket's inputs along a leading
+    stage axis, and lowers the whole bucket as ONE fused jitted ``shard_map``
+    dispatch (the ``batched_sharded_*`` twins in ``repro.dataplane``) sharing
+    a single ``all_to_all``.  Stages within a round are independent in the
+    MPC model (the load bound charges communication per round, not per
+    stage), so the fusion is free parallelism.  pow2 bucketing of both the
+    capacities and the stage axis bounds the number of compiled executables
+    by the geometry-signature count, not the stage count.
+
+    Overflow is detected (never dropped) per stage and channel: every fused
+    dispatch returns an (s, p, 2) overflow tensor read back **once per
+    (op, bucket)** — the scheduler's only host sync.  The retry re-runs just
+    the overflowed stages at doubled caps (only the channel that tripped:
+    *slot* re-randomizes the routing salts with a fresh attempt, *out* grows
+    the output buffer alone) — replacing the paper's 1/p^c failure
+    probability with deterministic retry.  Set ``batch_stages=False`` to
+    dispatch every work item as its own singleton bucket (the per-stage
+    schedule); results and retry behavior are identical by construction.
     """
 
     _LOWERING = {
@@ -677,12 +729,22 @@ class DataplaneExecutor:
         LocalJoin: "_lower_local_join",
     }
 
+    #: process-wide AOT-compiled executable cache, keyed by the full static
+    #: signature of one fused dispatch (mesh, axis, round, bucket key, caps,
+    #: padded stage count).  An absent signature ⇒ trace+compile (a jit cache
+    #: miss); a present one executes directly.  Bounded LRU: long-lived
+    #: processes running many programs evict oldest executables instead of
+    #: accumulating XLA binaries forever.
+    _compiled: "OrderedDict" = None
+    _COMPILED_CAPACITY = 1024
+
     def __init__(
         self,
         mesh=None,
         axis_name: str = "join",
         slack: int = 4,
         max_retries: int = 6,
+        batch_stages: bool = True,
     ):
         import jax
 
@@ -696,6 +758,17 @@ class DataplaneExecutor:
         self.p = mesh.shape[axis_name]
         self.slack = slack
         self.max_retries = max_retries
+        self.batch_stages = batch_stages
+        #: grid-route fanouts within this pow2 ratio of their group max merge
+        #: into the max's executable (sentinel-padded); beyond it they keep
+        #: their own pow2 fanout.
+        self.fanout_merge_ratio = 2
+        #: capacities learned from previous runs' overflow retries, keyed by
+        #: (round, group, static key): a repeat run starts each work item at
+        #: its last successful caps, so steady-state runs retry zero times.
+        #: Purely a function of earlier runs' outcomes (identical under
+        #: batched and unbatched scheduling), hence parity-safe.
+        self._learned_caps: Dict[Tuple, Dict[str, int]] = {}
 
     # -- capacity guesses (pow2-bucketed so retries and repeat runs hit the
     # -- jit cache; all of them are starting points for the doubling retry) ---
@@ -709,12 +782,20 @@ class DataplaneExecutor:
         spreads them over p destinations."""
         return _pow2(self.slack * (-(-max(1, n_total) // (self.p * self.p))))
 
+    def _block_cap(self, n_total: int) -> int:
+        """Host-staging block capacity (pow2 so geometry buckets coincide)."""
+        return _pow2(-(-max(1, n_total) // self.p))
+
     # -- public entry ---------------------------------------------------------
 
     def run(self, program: RoundProgram, materialize: bool = True) -> DataplaneJoinResult:
         self._retries = 0
         self._retry_log: List[Tuple[Tuple, str, str]] = []
         self._materialize = materialize
+        self._dispatches = 0
+        self._jit_hits = 0
+        self._jit_misses = 0
+        self._bucket_log: Dict[str, List[int]] = {}
         states = [
             _StageState(stage=st, skey=(st.hkey, st.ekey)) for st in program.stages
         ]
@@ -726,9 +807,9 @@ class DataplaneExecutor:
                 raise DataplaneUnsupported(
                     f"op {op!r} has no dataplane lowering rule"
                 ) from None
-            for state in states:
-                if not state.empty:
-                    lower(program, state, op)
+            live = [state for state in states if not state.empty]
+            if live:
+                lower(program, live, op)
 
         counts: Dict[Tuple[Attr, ...], int] = defaultdict(int)
         chunks: List[np.ndarray] = []
@@ -757,131 +838,359 @@ class DataplaneExecutor:
             per_h_counts=dict(counts),
             retries=self._retries,
             retry_log=list(self._retry_log),
+            dispatches=self._dispatches,
+            jit_cache_hits=self._jit_hits,
+            jit_cache_misses=self._jit_misses,
+            bucket_stage_counts={k: list(v) for k, v in self._bucket_log.items()},
         )
 
-    # -- overflow-retry harness ----------------------------------------------
+    # -- stage-batched scheduler ----------------------------------------------
 
-    def _retry_rounds(self, skey, round_name: str, attempt_fn):
-        """The one retry harness: run ``attempt_fn(attempt) -> (result, kinds)``
-        until ``kinds`` (the set of overflowed capacity channels, which the
-        callee has already doubled) comes back empty.  All retry accounting —
-        attempt budget, counter, log, failure error — lives here so every
-        lowering reports retries identically."""
-        for attempt in range(self.max_retries + 1):
-            result, kinds = attempt_fn(attempt)
-            if not kinds:
-                return result
-            self._retries += 1
-            self._retry_log.append((skey, round_name, "+".join(sorted(kinds))))
-        raise RuntimeError(
-            f"stage {skey} op {round_name} still overflows after "
-            f"{self.max_retries} capacity doublings"
-        )
+    @staticmethod
+    def _pow2_stages(s: int) -> int:
+        """Pad the stage axis to a power of two: retries shrink buckets, so
+        pow2 stage counts keep re-dispatches inside the executable cache."""
+        return 1 << max(0, int(s - 1).bit_length())
 
-    def _with_retry(self, skey, round_name: str, caps: Dict[str, int], run):
-        """Run ``run(caps, attempt) -> (result, [ovf arrays])`` until no
-        overflow, doubling only the capacity channel that overflowed (slot
-        overflow also doubles 'mid' when present; the attempt number feeds the
-        routing salts so slot retries draw fresh randomness)."""
+    @staticmethod
+    def _stack(arrs, s_pad: int) -> np.ndarray:
+        """Stack per-stage host blocks along a new leading stage axis and
+        zero-pad to ``s_pad`` (padded stages carry count 0 — inert rows that
+        cannot overflow).  All inter-op state is host numpy: slicing a
+        stage's result out of a bucket is a free view, and each fused
+        dispatch ships exactly one buffer per operand — no eager device ops
+        on the schedule's critical path."""
+        arrs = list(arrs)
+        x = np.stack(arrs)
+        if x.shape[0] < s_pad:
+            x = np.concatenate(
+                [x, np.zeros((s_pad - x.shape[0],) + x.shape[1:], x.dtype)]
+            )
+        return x
 
-        def attempt_fn(attempt):
-            result, ovfs = run(caps, attempt)
-            tot = np.zeros(2, dtype=np.int64)
-            for o in ovfs:
-                tot += np.asarray(o).reshape(-1, 2).sum(axis=0)
-            kinds = set()
-            if int(tot[0]):
-                for k in caps:
-                    if k != "out":
-                        caps[k] *= 2
-                kinds.add("slot")
-            if int(tot[1]):
-                caps["out"] *= 2
-                kinds.add("out")
-            return result, kinds
+    @staticmethod
+    def _rows_counts_post(outs, s: int):
+        """Shared dispatch postprocessor for (rows, counts, ovf) primitives:
+        slice off the stage padding and defer the host pull to ``finalize``."""
+        out, c, ovf = outs
 
-        return self._retry_rounds(skey, round_name, attempt_fn)
+        def finalize(out=out, c=c):
+            out, c = np.asarray(out), np.asarray(c)
+            return [(out[i], c[i]) for i in range(s)]
 
-    # -- per-op lowering rules ------------------------------------------------
+        return finalize, ovf[:s]
 
-    def _lower_scatter(self, program: RoundProgram, state: _StageState, op) -> None:
+    def _run_buckets(self, round_name: str, items: List[_WorkItem], dispatch):
+        """The one scheduling + retry harness every lowering rule runs on.
+
+        Groups ``items`` by (static key, caps) into geometry buckets, calls
+        ``dispatch(bucket) -> (finalize, ovf (s, p, 2))`` once per bucket —
+        ``finalize()`` pulls the bucket's outputs host-side and returns the
+        per-item results — then performs **one deferred readback per
+        bucket**, after every bucket's collectives are in flight.
+        Items whose retry group tripped are re-bucketed at ``attempt + 1``
+        (fresh salts) with only their own overflowed channels doubled; one
+        retry-log entry per (group, attempt) carries the union of the group's
+        channels, exactly like the per-stage harness it replaces.  With
+        ``batch_stages=False`` every item forms a singleton bucket — the
+        unbatched schedule, same code path."""
+        if not items:
+            return items
+        # Learned capacities: start each item at the caps its (round, group,
+        # key) slot ended the previous run with — steady-state runs never
+        # rediscover the same overflow.  Note the fixed point can take two
+        # runs to reach: if a strict subset of a bucket retried, the next
+        # run's key-group harmonization below merges everyone at the higher
+        # caps — a (key, caps, stage-count) signature the first run never
+        # compiled — so that run pays one compile and stores the converged
+        # caps; from then on signatures, caps, and retry counts are stable.
+        for it in items:
+            learned = self._learned_caps.get((round_name, it.group, it.key))
+            if learned:
+                for ch in it.caps:
+                    it.caps[ch] = max(it.caps[ch], learned[ch])
+        # Cap harmonization: items sharing a static key start from the group
+        # max per channel.  A pure function of the round's item set — NOT of
+        # the bucketing — so batched and unbatched schedules see identical
+        # capacities and hence identical overflow/retry behavior, while
+        # same-key items coalesce into one bucket instead of one per pow2 cap.
+        by_key: Dict[Tuple, List[_WorkItem]] = {}
+        for it in items:
+            by_key.setdefault(it.key, []).append(it)
+        for group in by_key.values():
+            for ch in group[0].caps:
+                m = max(g.caps[ch] for g in group)
+                for g in group:
+                    g.caps[ch] = m
+        pending = list(items)
+        while pending:
+            buckets: Dict[Tuple, List[_WorkItem]] = {}
+            for it in pending:
+                bkey = (it.key, tuple(sorted(it.caps.items())))
+                if not self.batch_stages:
+                    bkey = bkey + (id(it),)     # force singleton buckets
+                buckets.setdefault(bkey, []).append(it)
+
+            bucket_list = list(buckets.values())
+            prepared = []
+            to_compile: Dict[Tuple, Tuple] = {}
+            if DataplaneExecutor._compiled is None:
+                from collections import OrderedDict
+
+                DataplaneExecutor._compiled = OrderedDict()
+            cache = DataplaneExecutor._compiled
+            for bucket in bucket_list:
+                sig = (
+                    self.mesh,
+                    self.axis_name,
+                    round_name,
+                    bucket[0].key,
+                    tuple(sorted(bucket[0].caps.items())),
+                    self._pow2_stages(len(bucket)),
+                )
+                if sig in cache:
+                    cache.move_to_end(sig)
+                fn, args, post = dispatch(bucket)
+                if sig in cache or sig in to_compile:
+                    self._jit_hits += 1
+                else:
+                    to_compile[sig] = (fn, args)
+                    self._jit_misses += 1
+                self._dispatches += 1
+                self._bucket_log.setdefault(round_name, []).append(len(bucket))
+                prepared.append((bucket, sig, args, post))
+
+            # AOT-compile the round's unseen signatures concurrently: XLA
+            # compilation releases the GIL, so distinct executables compile
+            # in parallel and cold time pays max, not sum, per round.
+            # Execution stays strictly serial — concurrent executions of
+            # different collective programs interleave their all_to_all
+            # rendezvous across the device threads and deadlock.
+            if to_compile:
+
+                def compile_one(item):
+                    sig, (fn, args) = item
+                    return sig, fn.lower(*args).compile()
+
+                todo = list(to_compile.items())
+                if len(todo) > 1:
+                    import os
+                    from concurrent.futures import ThreadPoolExecutor
+
+                    workers = min(len(todo), max(2, os.cpu_count() or 2))
+                    with ThreadPoolExecutor(max_workers=workers) as pool:
+                        for sig, comp in pool.map(compile_one, todo):
+                            cache[sig] = comp
+                else:
+                    sig, comp = compile_one(todo[0])
+                    cache[sig] = comp
+                while len(cache) > self._COMPILED_CAPACITY:
+                    cache.popitem(last=False)
+
+            launched = []
+            for bucket, sig, args, post in prepared:
+                launched.append((bucket, *post(cache[sig](*args))))
+
+            # one deferred readback per (op, bucket): the scheduler's only
+            # host sync — every bucket's collectives are already in flight.
+            tripped: Dict[int, set] = {}
+            for bucket, finalize, ovf in launched:
+                ovf_np = np.asarray(ovf)
+                results = finalize()
+                for i, it in enumerate(bucket):
+                    tot = ovf_np[i].reshape(-1, 2).sum(axis=0)
+                    kinds = set()
+                    if int(tot[0]):
+                        kinds.add("slot")
+                    if int(tot[1]):
+                        kinds.add("out")
+                    tripped[id(it)] = kinds
+                    it.result = results[i]
+
+            group_kinds: Dict[Tuple, set] = {}
+            for it in pending:
+                if tripped[id(it)]:
+                    group_kinds.setdefault(it.group, set()).update(tripped[id(it)])
+
+            retry: List[_WorkItem] = []
+            logged = set()
+            for it in pending:          # original item order → deterministic log
+                if it.group not in group_kinds:
+                    continue
+                if it.group not in logged:
+                    logged.add(it.group)
+                    self._retries += 1
+                    self._retry_log.append(
+                        (
+                            it.state.skey,
+                            round_name,
+                            "+".join(sorted(group_kinds[it.group])),
+                        )
+                    )
+                for ch in tripped[id(it)]:   # double only the tripped channels
+                    it.caps[ch] *= 2
+                it.attempt += 1
+                if it.attempt > self.max_retries:
+                    raise RuntimeError(
+                        f"stage {it.state.skey} op {round_name} still overflows "
+                        f"after {self.max_retries} capacity doublings"
+                    )
+                retry.append(it)
+            pending = retry
+        for it in items:
+            self._learned_caps[(round_name, it.group, it.key)] = dict(it.caps)
+        return items
+
+    # -- per-op lowering rules (each batches every live stage of the op) ------
+
+    def _lower_scatter(self, program: RoundProgram, states, op) -> None:
         """Scatter costs no load in the MPC model; the dataplane holds the
         inputs host-side (the histogram is shared metadata), so placement
         happens when RouteResidual stages the carved residuals."""
 
-    def _lower_route_residual(self, program, state, op) -> None:
+    def _lower_route_residual(self, program, states, op) -> None:
         from ..dataplane.exchange import blockify
 
         query, stats = program.query, program.stats
-        plan = state.stage.plan
-        residuals = residual_relations(query, stats, plan, state.stage.cfg.eta)
-        if residuals is None:
-            raise RuntimeError(
-                f"stage {state.skey} compiled for an infeasible η — compiler bug"
-            )
-
-        # Host view of R''_X = ∩ unary pieces: decides the stage's fate the
-        # same way the simulator's geometry does (empty isolated piece ⇒
-        # geo.skip ⇒ no per-H count entry; any other empty input ⇒ a normal
-        # zero-count stage).
-        host_piece: Dict[Attr, np.ndarray] = {}
-        for x in plan.border:
-            vals = None
-            for e in plan.cross_edges:
-                if x not in e:
-                    continue
-                pv = np.unique(residuals[(e, (x,))].data[:, 0])
-                vals = pv if vals is None else np.intersect1d(
-                    vals, pv, assume_unique=True
+        staged_states = []
+        for state in states:
+            plan = state.stage.plan
+            residuals = residual_relations(query, stats, plan, state.stage.cfg.eta)
+            if residuals is None:
+                raise RuntimeError(
+                    f"stage {state.skey} compiled for an infeasible η — compiler bug"
                 )
-            host_piece[x] = vals
-        if any(host_piece[x].size == 0 for x in plan.isolated):
-            state.empty, state.skip_count = True, True
-            return
-        if any(v.size == 0 for v in host_piece.values()):
-            state.empty = True
-            return
 
-        state.light = []
-        for e in plan.light_edges:
-            rel = residuals[(e, query.relation_for(e).scheme)]
-            if len(rel) == 0:
+            # Host view of R''_X = ∩ unary pieces: decides the stage's fate the
+            # same way the simulator's geometry does (empty isolated piece ⇒
+            # geo.skip ⇒ no per-H count entry; any other empty input ⇒ a normal
+            # zero-count stage).
+            host_piece: Dict[Attr, np.ndarray] = {}
+            for x in plan.border:
+                vals = None
+                for e in plan.cross_edges:
+                    if x not in e:
+                        continue
+                    pv = np.unique(residuals[(e, (x,))].data[:, 0])
+                    vals = pv if vals is None else np.intersect1d(
+                        vals, pv, assume_unique=True
+                    )
+                host_piece[x] = vals
+            if any(host_piece[x].size == 0 for x in plan.isolated):
+                state.empty, state.skip_count = True, True
+                continue
+            if any(v.size == 0 for v in host_piece.values()):
                 state.empty = True
-                return
-            blocks, cnts = blockify(rel.data, self.p, None)
-            state.light.append(
-                (list(query.relation_for(e).scheme), blocks, cnts, len(rel))
-            )
-        state.unary = {}
-        for x in plan.border:
-            staged = []
-            for e in plan.cross_edges:
-                if x not in e:
-                    continue
-                r = residuals[(e, (x,))]
-                bv, bc = blockify(r.data[:, 0], self.p, None)
-                staged.append((bv[:, :, 0], bc, len(r)))
-            state.unary[x] = staged
-        state.host_piece_n = {x: int(v.size) for x, v in host_piece.items()}
+                continue
+            empty = False
+            for e in plan.light_edges:
+                if len(residuals[(e, query.relation_for(e).scheme)]) == 0:
+                    state.empty = empty = True
+                    break
+            if empty:
+                continue
+            state.host_piece_n = {x: int(v.size) for x, v in host_piece.items()}
+            staged_states.append((state, residuals))
 
-    def _lower_hash_partition(self, program, state, op) -> None:
-        from ..dataplane.join import sharded_intersect
+        # Program-wide unary block capacity and piece count (pure functions of
+        # the program's residual sizes, independent of scheduling): every
+        # stage's staged R''_X inputs share one shape, so the HashPartition
+        # intersects coalesce into a single geometry bucket.  Light blocks
+        # keep per-fragment pow2 caps — they are the big rows and padding them
+        # to a global max would inflate every downstream exchange.
+        unary_cap, n_pieces = 1, 1
+        for state, residuals in staged_states:
+            plan = state.stage.plan
+            for x in plan.border:
+                es = [e for e in plan.cross_edges if x in e]
+                n_pieces = max(n_pieces, len(es))
+                for e in es:
+                    unary_cap = max(
+                        unary_cap, self._block_cap(len(residuals[(e, (x,))]))
+                    )
 
-        for x, staged in state.unary.items():
-            n_max = max(n for _, _, n in staged)
-            caps = {"slot": self._slot_cap(n_max), "out": self._cap(n_max)}
-
-            def run(caps, attempt, _staged=staged, _x=x):
-                salt = _salt(state.skey, _x, attempt=attempt)
-                vals, cnts, ovf = sharded_intersect(
-                    self.mesh, self.axis_name,
-                    [(bv, bc) for bv, bc, _ in _staged],
-                    salt=salt, cap_slot=caps["slot"], cap_out=caps["out"],
+        for state, residuals in staged_states:
+            plan = state.stage.plan
+            state.light = []
+            for e in plan.light_edges:
+                rel = residuals[(e, query.relation_for(e).scheme)]
+                blocks, cnts = blockify(
+                    rel.data, self.p, self._block_cap(len(rel)), to_device=False
                 )
-                return (vals, cnts, salt), [ovf]
+                state.light.append(
+                    (list(query.relation_for(e).scheme), blocks, cnts, len(rel))
+                )
+            state.unary = {}
+            for x in plan.border:
+                staged = []
+                for e in plan.cross_edges:
+                    if x not in e:
+                        continue
+                    r = residuals[(e, (x,))]
+                    bv, bc = blockify(r.data[:, 0], self.p, unary_cap, to_device=False)
+                    staged.append((bv[:, :, 0], bc, len(r)))
+                # Padding to the program-wide piece count with a repeat of the
+                # last piece is an intersection no-op (A ∩ A = unique(A)) —
+                # it buys every stage the same executable.
+                while len(staged) < n_pieces:
+                    staged.append(staged[-1])
+                state.unary[x] = staged
 
-            vals, cnts, salt = self._with_retry(state.skey, op.round, caps, run)
-            total = int(np.asarray(cnts).sum())
+    def _lower_hash_partition(self, program, states, op) -> None:
+        from ..dataplane.exchange import salt_offset
+        from ..dataplane.join import batched_sharded_intersect
+
+        items: List[_WorkItem] = []
+        for state in states:
+            for x, staged in state.unary.items():
+                n_max = max(n for _, _, n in staged)
+                caps = {"slot": self._slot_cap(n_max), "out": self._cap(n_max)}
+                items.append(_WorkItem(
+                    state=state,
+                    key=("intersect", tuple(bv.shape for bv, _, _ in staged)),
+                    caps=caps,
+                    payload={"x": x, "staged": staged},
+                    group=("intersect", state.skey, x),
+                ))
+
+        def dispatch(bucket):
+            s, s_pad = len(bucket), self._pow2_stages(len(bucket))
+            n_pieces = len(bucket[0].payload["staged"])
+            pieces = [
+                (
+                    self._stack([it.payload["staged"][i][0] for it in bucket], s_pad),
+                    self._stack([it.payload["staged"][i][1] for it in bucket], s_pad),
+                )
+                for i in range(n_pieces)
+            ]
+            salts = [
+                _salt(it.state.skey, it.payload["x"], attempt=it.attempt)
+                for it in bucket
+            ]
+            offs = np.asarray(
+                [salt_offset(v) for v in salts] + [0] * (s_pad - s), np.int32
+            )
+            caps = bucket[0].caps
+            fn, args = batched_sharded_intersect(
+                self.mesh, self.axis_name, pieces, offs,
+                cap_slot=caps["slot"], cap_out=caps["out"], invoke=False,
+            )
+
+            def post(outs, salts=salts, s=s):
+                vals, cnts, ovf = outs
+
+                def finalize(vals=vals, cnts=cnts):
+                    vals, cnts = np.asarray(vals), np.asarray(cnts)
+                    return [(vals[i], cnts[i], salts[i]) for i in range(s)]
+
+                return finalize, ovf[:s]
+
+            return fn, args, post
+
+        for it in self._run_buckets(op.round, items, dispatch):
+            state, x = it.state, it.payload["x"]
+            vals, cnts, salt = it.result
+            total = int(cnts.sum())
             if total != state.host_piece_n[x]:
                 raise RuntimeError(
                     f"stage {state.skey}: device |R''_{x}| = {total} != host "
@@ -891,12 +1200,13 @@ class DataplaneExecutor:
             state.piece_salt[x] = salt
             state.piece_n[x] = total
 
-    def _lower_semijoin(self, program, state, op) -> None:
+    def _lower_semijoin(self, program, states, op) -> None:
         """Phase x (and its fused-route twin) filters column 0, phase y (and
         fused-filter) column 1 — the fused rewrite reorders the detour but the
         per-attribute filters are the same, so both program shapes lower
         through this one rule."""
-        from ..dataplane.join import sharded_semijoin
+        from ..dataplane.exchange import salt_offset
+        from ..dataplane.join import batched_sharded_semijoin
 
         if op.phase in ("x", "fused-route"):
             col = 0
@@ -905,169 +1215,297 @@ class DataplaneExecutor:
         else:
             raise DataplaneUnsupported(f"SemiJoin phase {op.phase!r}")
 
-        for idx, (scheme, blocks, cnts, n) in enumerate(state.light):
-            attr = scheme[col]
-            if attr not in state.pieces:
-                continue
-            pv, pc = state.pieces[attr]
-            caps = {"slot": self._slot_cap(n), "out": self._cap(n)}
+        items: List[_WorkItem] = []
+        for state in states:
+            for idx, (scheme, blocks, cnts, n) in enumerate(state.light):
+                attr = scheme[col]
+                if attr not in state.pieces:
+                    continue
+                pv, pc = state.pieces[attr]
+                caps = {"slot": self._slot_cap(n), "out": self._cap(n)}
+                items.append(_WorkItem(
+                    state=state,
+                    key=("semijoin", col, tuple(blocks.shape), tuple(pv.shape)),
+                    caps=caps,
+                    payload={"idx": idx, "attr": attr, "blocks": blocks,
+                             "cnts": cnts, "pv": pv, "pc": pc},
+                    group=("semijoin", state.skey, idx),
+                ))
 
-            def run(caps, attempt, _b=blocks, _c=cnts, _pv=pv, _pc=pc, _a=attr):
-                # the exchange salt is pinned to the piece's distribution salt
-                # (rows must land where HashPartition put the piece), so only
-                # capacities scale on retry here.
-                rows, c, ovf = sharded_semijoin(
-                    self.mesh, self.axis_name, _b, _c,
-                    [(col, state.piece_salt[_a], _pv, _pc)],
-                    cap_slot=caps["slot"], cap_out=caps["out"],
-                )
-                return (rows, c), [ovf]
+        def dispatch(bucket):
+            s, s_pad = len(bucket), self._pow2_stages(len(bucket))
+            rows = self._stack([it.payload["blocks"] for it in bucket], s_pad)
+            cnts = self._stack([it.payload["cnts"] for it in bucket], s_pad)
+            pv = self._stack([it.payload["pv"] for it in bucket], s_pad)
+            pc = self._stack([it.payload["pc"] for it in bucket], s_pad)
+            # the exchange salt is pinned to the piece's distribution salt
+            # (rows must land where HashPartition put the piece), so only
+            # capacities scale on retry here.
+            offs = np.asarray(
+                [salt_offset(it.state.piece_salt[it.payload["attr"]])
+                 for it in bucket] + [0] * (s_pad - s),
+                np.int32,
+            )
+            caps = bucket[0].caps
+            fn, args = batched_sharded_semijoin(
+                self.mesh, self.axis_name, rows, cnts, col, offs, pv, pc,
+                cap_slot=caps["slot"], cap_out=caps["out"], invoke=False,
+            )
+            return fn, args, partial(self._rows_counts_post, s=s)
 
-            blocks, cnts = self._with_retry(state.skey, op.round, caps, run)
-            n2 = int(np.asarray(cnts).sum())
+        for it in self._run_buckets(op.round, items, dispatch):
+            state, idx = it.state, it.payload["idx"]
+            scheme = state.light[idx][0]
+            blocks, cnts = it.result
+            n2 = int(cnts.sum())
             state.light[idx] = (scheme, blocks, cnts, n2)
             if n2 == 0:
                 state.empty = True
-                return
 
-    def _lower_broadcast_sizes(self, program, state, op) -> None:
-        """The O(p²) size round: per-device piece counts cross to the host;
-        `stage_geometry` (shared verbatim with the simulator) turns them into
-        the stage's CP grid × HyperCube shape and the global-id offsets."""
-        entries: Dict[Attr, List[Tuple[int, int]]] = {}
-        for x in state.stage.plan.isolated:
-            cnts = np.asarray(state.pieces[x][1])
-            entries[x] = list(enumerate(int(c) for c in cnts.tolist()))
-        state.geo = stage_geometry(program, state.stage, entries)
-        if state.geo.skip:
-            state.empty, state.skip_count = True, True
-
-    def _lower_grid_route(self, program, state, op) -> None:
-        from ..dataplane.grid import cp_route_spec, hc_route_spec, sharded_grid_route
-
-        geo = state.geo
-        if geo is None:
-            raise DataplaneUnsupported("GridRoute before BroadcastSizes")
-        if geo.cp_size * geo.hc_size >= 1 << 31:
-            raise RuntimeError(f"stage {state.skey}: virtual grid exceeds int32")
-        routed: List = []
-
-        # HC side first (join order: light join, then CP cartesian factors).
-        # One retry loop spans all light fragments: the per-attribute
-        # coordinate salts must stay consistent across edges, so a fresh
-        # attempt re-routes every fragment under new salts.
-        if state.light:
-            specs = [
-                hc_route_spec(geo.hc_grid, scheme, geo.cp_size)
-                for scheme, _, _, _ in state.light
-            ]
-            caps = [
-                {"slot": self._slot_cap(n * s.fanout), "out": self._cap(n * s.fanout)}
-                for (_, _, _, n), s in zip(state.light, specs)
-            ]
-            def route_all(attempt):
-                salt_for = {
-                    a: _salt(state.skey, "hc", a, attempt=attempt)
-                    for a in geo.hc_grid.attrs
-                }
-                results = []
-                kinds: set = set()
-                for (scheme, blocks, cnts, n), spec, cap in zip(
-                    state.light, specs, caps
-                ):
-                    salts = [salt_for[scheme[col]] for col, _, _ in spec.fixed]
-                    rows, c, ovf = sharded_grid_route(
-                        self.mesh, self.axis_name, blocks, cnts, spec,
-                        salts=salts, cap_slot=cap["slot"], cap_out=cap["out"],
-                    )
-                    ovf = np.asarray(ovf).sum(axis=0)
-                    if int(ovf[0]):
-                        cap["slot"] *= 2
-                        kinds.add("slot")
-                    if int(ovf[1]):
-                        cap["out"] *= 2
-                        kinds.add("out")
-                    results.append((["#cell"] + list(scheme), rows, c))
-                return results, kinds
-
-            routed.extend(self._retry_rounds(state.skey, op.round, route_all))
-
-        # CP side: id-deterministic routing (no salts), per-piece retry.
-        for li, x in enumerate(geo.iso_order):
-            vals, cnts = state.pieces[x]
-            spec = cp_route_spec(geo.grid, li, geo.hc_size)
-            offsets = np.asarray(
-                [geo.offsets[(x, dev)] for dev in range(self.p)], dtype=np.int64
-            )
-            n = state.piece_n[x]
-            caps = {
-                "slot": self._slot_cap(n * spec.fanout),
-                "out": self._cap(n * spec.fanout),
+    def _lower_broadcast_sizes(self, program, states, op) -> None:
+        """The O(p²) size round: the per-device piece counts already crossed
+        to the host with the HashPartition readback; `stage_geometry` (shared
+        verbatim with the simulator) turns them into the stage's CP grid ×
+        HyperCube shape and the global-id offsets."""
+        for state in states:
+            entries: Dict[Attr, List[Tuple[int, int]]] = {
+                x: list(enumerate(int(c) for c in state.pieces[x][1].tolist()))
+                for x in state.stage.plan.isolated
             }
+            state.geo = stage_geometry(program, state.stage, entries)
+            if state.geo.skip:
+                state.empty, state.skip_count = True, True
 
-            def run(caps, attempt, _v=vals, _c=cnts, _s=spec, _o=offsets):
-                rows, c, ovf = sharded_grid_route(
-                    self.mesh, self.axis_name, _v[:, :, None], _c, _s,
-                    offsets=_o, cap_slot=caps["slot"], cap_out=caps["out"],
+    def _lower_grid_route(self, program, states, op) -> None:
+        from ..dataplane.grid import (
+            CPBatchSig,
+            HCBatchSig,
+            _pad_table,
+            batched_sharded_grid_route,
+            cp_batch_params,
+            hc_batch_params,
+        )
+
+        # Pass 1: per-fragment route parameters.  Pass 2 pads each group's
+        # fanout to the group max pow2 (sentinel copies are ghosted, so the
+        # padding is semantics-free and a pure function of the round's item
+        # set — identical under batched and unbatched scheduling), which
+        # merges all CP routes into one executable per block shape and all HC
+        # routes into one per (hashed columns, block shape).
+        raw = []
+        for state in states:
+            geo = state.geo
+            if geo is None:
+                raise DataplaneUnsupported("GridRoute before BroadcastSizes")
+            if geo.cp_size * geo.hc_size >= 1 << 31:
+                raise RuntimeError(f"stage {state.skey}: virtual grid exceeds int32")
+            n_parts = (len(state.light) if state.light else 0) + len(geo.iso_order)
+            state.routed = [None] * n_parts
+            pos = 0
+
+            # HC side first (join order: light join, then CP cartesian
+            # factors).  All light fragments of a stage share one retry group:
+            # the per-attribute coordinate salts must stay consistent across
+            # edges, so a fresh attempt re-routes every fragment of the stage.
+            for scheme, blocks, cnts, n in state.light or []:
+                cols, shares, strides, table = hc_batch_params(
+                    geo.hc_grid, scheme, geo.cp_size
                 )
-                return (rows, c), [ovf]
+                raw.append((state, "hc", pos, {
+                    "scheme": scheme, "blocks": blocks, "cnts": cnts,
+                    "cols": cols, "shares": shares, "strides": strides,
+                    "table": table, "n": n,
+                }))
+                pos += 1
 
-            rows, c = self._with_retry(state.skey, op.round, caps, run)
-            routed.append((["#cell", x], rows, c))
+            # CP side: id-deterministic routing (no salts), per-piece retry.
+            for li, x in enumerate(geo.iso_order):
+                vals, cnts = state.pieces[x]
+                dim, scale, table = cp_batch_params(geo.grid, li, geo.hc_size)
+                offsets = np.asarray(
+                    [geo.offsets[(x, dev)] for dev in range(self.p)],
+                    dtype=np.int64,
+                )
+                raw.append((state, "cp", pos, {
+                    "x": x, "vals": vals, "cnts": cnts, "offsets": offsets,
+                    "dim": dim, "scale": scale, "table": table,
+                    "n": state.piece_n[x],
+                }))
+                pos += 1
 
-        state.routed = routed
+        group_fanout: Dict[Tuple, int] = {}
+        for state, kind, pos, pl in raw:
+            gk = (kind, pl.get("cols"))
+            group_fanout[gk] = max(group_fanout.get(gk, 1), len(pl["table"]))
 
-    def _lower_local_join(self, program, state, op) -> None:
+        items: List[_WorkItem] = []
+        for state, kind, pos, pl in raw:
+            # Merge into the group's max fanout only when within
+            # ``fanout_merge_ratio`` of it — nearby fanouts share one
+            # executable at bounded sentinel padding, while a small fragment
+            # next to a huge broadcast keeps its own pow2 instead of paying
+            # the giant's table.
+            f_max = _pow2(group_fanout[(kind, pl.get("cols"))])
+            own = _pow2(len(pl["table"]))
+            fanout = f_max if own * self.fanout_merge_ratio >= f_max else own
+            n = pl["n"]
+            # Replicating routes are lumpier than hash exchanges — every
+            # source concentrates cap·fanout copies on few cells — so start
+            # the slot channel at double slack instead of discovering the
+            # same doubling through a retry (and its extra executable) on
+            # every fresh program.
+            caps = {
+                "slot": 2 * self._slot_cap(n * len(pl["table"])),
+                "out": self._cap(n * len(pl["table"])),
+            }
+            if kind == "hc":
+                sig = HCBatchSig(cols=pl["cols"], fanout=fanout)
+                key = ("hc", sig, tuple(pl["blocks"].shape))
+                group = ("hc", state.skey)
+            else:
+                sig = CPBatchSig(fanout=fanout)
+                key = ("cp", sig, tuple(pl["vals"].shape))
+                group = ("cp", state.skey, pl["x"])
+            items.append(_WorkItem(
+                state=state, key=key, caps=caps,
+                payload={"pos": pos, "sig": sig, **pl}, group=group,
+            ))
+
+        def dispatch(bucket):
+            s, s_pad = len(bucket), self._pow2_stages(len(bucket))
+            sig = bucket[0].payload["sig"]
+            caps = bucket[0].caps
+            pad = s_pad - s
+            cnts = self._stack([it.payload["cnts"] for it in bucket], s_pad)
+            table = np.stack(
+                [_pad_table(it.payload["table"], sig.fanout) for it in bucket]
+                + [np.full((sig.fanout,), -1, np.int32)] * pad
+            )
+            if bucket[0].key[0] == "hc":
+                rows = self._stack([it.payload["blocks"] for it in bucket], s_pad)
+                nf = len(sig.cols)
+                salts = np.ones((s_pad, nf), dtype=np.uint32)
+                shares = np.ones((s_pad, nf), dtype=np.uint32)
+                strides = np.zeros((s_pad, nf), dtype=np.int32)
+                for i, it in enumerate(bucket):
+                    scheme = it.payload["scheme"]
+                    salts[i] = [
+                        _salt(it.state.skey, "hc", scheme[c], attempt=it.attempt)
+                        for c in sig.cols
+                    ]
+                    shares[i] = it.payload["shares"]
+                    strides[i] = it.payload["strides"]
+                fn, args = batched_sharded_grid_route(
+                    self.mesh, self.axis_name, rows, cnts, sig,
+                    salts=salts, shares=shares, strides=strides, table=table,
+                    cap_slot=caps["slot"], cap_out=caps["out"], invoke=False,
+                )
+            else:
+                rows = self._stack(
+                    [it.payload["vals"][:, :, None] for it in bucket], s_pad
+                )
+                offsets = self._stack(
+                    [np.asarray(it.payload["offsets"], np.int32) for it in bucket],
+                    s_pad,
+                )
+                dims = np.asarray(
+                    [it.payload["dim"] for it in bucket] + [1] * pad, np.int32
+                )
+                scales = np.asarray(
+                    [it.payload["scale"] for it in bucket] + [0] * pad, np.int32
+                )
+                fn, args = batched_sharded_grid_route(
+                    self.mesh, self.axis_name, rows, cnts, sig,
+                    offsets=offsets, dims=dims, scales=scales, table=table,
+                    cap_slot=caps["slot"], cap_out=caps["out"], invoke=False,
+                )
+            return fn, args, partial(self._rows_counts_post, s=s)
+
+        for it in self._run_buckets(op.round, items, dispatch):
+            rows, cnts = it.result
+            n = int(cnts.sum())
+            if it.key[0] == "hc":
+                scheme = ["#cell"] + list(it.payload["scheme"])
+            else:
+                scheme = ["#cell", it.payload["x"]]
+            it.state.routed[it.payload["pos"]] = (scheme, rows, cnts, n)
+
+    def _lower_local_join(self, program, states, op) -> None:
         """Communication-free output: all fragments of a virtual cell live on
         device cell % p, so the per-cell join is a chain of colocated joins on
         the cell column — shared attributes equality-filtered via dup_pairs,
         disconnected components and CP lists combined as in-cell cartesian
-        factors.  Each result tuple materializes on exactly one device."""
+        factors.  Each chain level batches every stage still joining; a
+        stage's chain advances as soon as its level lands (counts feed the
+        next level's capacity guess)."""
         from ..dataplane.exchange import unblockify
-        from ..dataplane.join import sharded_colocated_join
+        from ..dataplane.join import batched_sharded_colocated_join
 
-        if state.routed is None:
-            raise DataplaneUnsupported("LocalJoin before GridRoute")
-        parts = list(state.routed)
-        scheme, blocks, cnts = parts.pop(0)
-        while parts:
-            b_scheme, b_blocks, b_cnts = parts.pop(0)
-            common = [a for a in scheme[1:] if a in b_scheme]
-            dup_pairs = tuple(
-                (scheme.index(a), b_scheme.index(a)) for a in common
-            )
-            n_a = int(np.asarray(cnts).sum())
-            n_b = int(np.asarray(b_cnts).sum())
-            caps = {"out": self._cap(4 * (n_a + n_b))}
+        for state in states:
+            if state.routed is None:
+                raise DataplaneUnsupported("LocalJoin before GridRoute")
+            state.parts = list(state.routed)
 
-            def run(caps, attempt, _a=blocks, _ac=cnts, _b=b_blocks, _bc=b_cnts,
-                    _dp=dup_pairs):
-                out, c, ovf = sharded_colocated_join(
-                    self.mesh, self.axis_name, _a, _ac, _b, _bc, 0, 0,
-                    cap_out=caps["out"], dup_pairs=_dp,
+        while True:
+            active = [state for state in states if len(state.parts) >= 2]
+            if not active:
+                break
+            items: List[_WorkItem] = []
+            for state in active:
+                a_scheme, a_blocks, a_cnts, n_a = state.parts[0]
+                b_scheme, b_blocks, b_cnts, n_b = state.parts[1]
+                common = [a for a in a_scheme[1:] if a in b_scheme]
+                dup_pairs = tuple(
+                    (a_scheme.index(a), b_scheme.index(a)) for a in common
                 )
-                return (out, c), [ovf]
+                out_scheme = a_scheme + [
+                    a for i, a in enumerate(b_scheme) if i != 0 and a not in common
+                ]
+                items.append(_WorkItem(
+                    state=state,
+                    key=("join", tuple(a_blocks.shape), tuple(b_blocks.shape),
+                         dup_pairs),
+                    caps={"out": self._cap(4 * (n_a + n_b))},
+                    payload={"a": (a_blocks, a_cnts), "b": (b_blocks, b_cnts),
+                             "dup_pairs": dup_pairs, "scheme": out_scheme},
+                    group=("join", state.skey),
+                ))
 
-            blocks, cnts = self._with_retry(state.skey, op.round, caps, run)
-            scheme = scheme + [
-                a for i, a in enumerate(b_scheme) if i != 0 and a not in common
-            ]
+            def dispatch(bucket):
+                s, s_pad = len(bucket), self._pow2_stages(len(bucket))
+                a = self._stack([it.payload["a"][0] for it in bucket], s_pad)
+                ac = self._stack([it.payload["a"][1] for it in bucket], s_pad)
+                b = self._stack([it.payload["b"][0] for it in bucket], s_pad)
+                bc = self._stack([it.payload["b"][1] for it in bucket], s_pad)
+                fn, args = batched_sharded_colocated_join(
+                    self.mesh, self.axis_name, a, ac, b, bc, 0, 0,
+                    cap_out=bucket[0].caps["out"],
+                    dup_pairs=bucket[0].payload["dup_pairs"], invoke=False,
+                )
+                return fn, args, partial(self._rows_counts_post, s=s)
 
-        state.n_out = int(np.asarray(cnts).sum())
-        if not self._materialize or state.n_out == 0:
-            return
-        rows = unblockify(blocks, cnts)[:, 1:]     # drop the cell column
-        out_scheme = scheme[1:]
-        for a in state.stage.plan.h_set:
-            rows = np.concatenate(
-                [
-                    rows,
-                    np.full(
-                        (rows.shape[0], 1), state.stage.cfg.eta.value(a), np.int64
-                    ),
-                ],
-                axis=1,
-            )
-            out_scheme = out_scheme + [a]
-        perm = [out_scheme.index(a) for a in program.out_cols]
-        state.rows = rows[:, perm]
+            for it in self._run_buckets(op.round, items, dispatch):
+                blocks, cnts = it.result
+                n = int(cnts.sum())
+                it.state.parts[0:2] = [(it.payload["scheme"], blocks, cnts, n)]
+
+        for state in states:
+            scheme, blocks, cnts, n = state.parts[0]
+            state.n_out = n
+            if not self._materialize or n == 0:
+                continue
+            rows = unblockify(blocks, cnts)[:, 1:]     # drop the cell column
+            out_scheme = scheme[1:]
+            for a in state.stage.plan.h_set:
+                rows = np.concatenate(
+                    [
+                        rows,
+                        np.full(
+                            (rows.shape[0], 1), state.stage.cfg.eta.value(a), np.int64
+                        ),
+                    ],
+                    axis=1,
+                )
+                out_scheme = out_scheme + [a]
+            perm = [out_scheme.index(a) for a in program.out_cols]
+            state.rows = rows[:, perm]

@@ -182,6 +182,25 @@ DEFAULT_OPS: Tuple[RoundOp, ...] = (
 # ---------------------------------------------------------------------------
 
 
+@dataclass(frozen=True)
+class StageSignature:
+    """Compile-time batching signature of a stage (bucket-signature metadata).
+
+    Two stages with equal signatures perform structurally identical work in
+    every round — same light/cross edge shapes, same border and isolated
+    attribute counts — differing only in η values and data sizes.  The
+    stage-batched :class:`~repro.mpc.executors.DataplaneExecutor` groups work
+    finer than this (adding run-time geometry and pow2 capacities), but the
+    signature is the IR-level upper bound on how many compiled variants a
+    program can need: O(#signatures), never O(#stages)."""
+
+    h_set: Tuple[Attr, ...]
+    light_edges: Tuple[Tuple[Attr, ...], ...]
+    cross_edges: Tuple[Tuple[Attr, ...], ...]
+    border: Tuple[Attr, ...]
+    isolated: Tuple[Attr, ...]
+
+
 @dataclass
 class ProgramStage:
     """One (H, η) configuration with its machine allocation.
@@ -200,6 +219,22 @@ class ProgramStage:
     @property
     def ekey(self) -> Tuple[int, ...]:
         return self.cfg.eta.values
+
+    @property
+    def signature(self) -> StageSignature:
+        """The stage's compile-time batching signature (see
+        :class:`StageSignature`)."""
+        return StageSignature(
+            h_set=tuple(self.plan.h_set),
+            light_edges=tuple(
+                tuple(sorted(e)) for e in self.plan.light_edges
+            ),
+            cross_edges=tuple(
+                tuple(sorted(e)) for e in self.plan.cross_edges
+            ),
+            border=tuple(sorted(self.plan.border)),
+            isolated=tuple(sorted(self.plan.isolated)),
+        )
 
 
 @dataclass
@@ -237,6 +272,16 @@ class RoundProgram:
             if isinstance(op, SemiJoin):
                 name += f"[{op.phase}]"
             out.append(name)
+        return out
+
+    def bucket_histogram(self) -> Dict["StageSignature", int]:
+        """Stage count per compile-time batching signature — the IR-level
+        view of how a stage-batched executor will bucket this program (the
+        bench and the scheduler-observability tests read it)."""
+        out: Dict[StageSignature, int] = {}
+        for st in self.stages:
+            sig = st.signature
+            out[sig] = out.get(sig, 0) + 1
         return out
 
     def query_plan(self) -> QueryPlan:
