@@ -1,0 +1,160 @@
+"""Subgraph enumeration benchmark: the paper's corollary workload end to end.
+
+Each case compiles a pattern against a seeded graph, verifies the engine's
+occurrence set against the brute-force backtracking oracle (the acceptance
+bar: automorphism-deduped, each occurrence exactly once), and reports the
+simulator's exact MPC load next to the dataplane's cold/warm wall-clock —
+the same apples-to-apples structure as ``bench_program_backends``.
+
+The headline cases are the acceptance pair: triangle + 4-clique on a
+12k-edge Zipf graph (heavy hubs, degree-oriented tables, one shared physical
+table per query through the shared-input Scatter).
+
+Every run appends a machine-readable snapshot to ``BENCH_subgraph.json`` at
+the repo root (override with ``BENCH_SUBGRAPH_RESULTS_PATH``) so the perf
+trajectory accumulates across PRs; ``compare_bench.py --bench subgraph``
+diffs the two latest snapshots under the same >25% warm-regression gate.
+
+Run standalone with 8 fake host devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \\
+        PYTHONPATH=src python -m benchmarks.run --only subgraph
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.graph import (
+    brute_force_occurrences,
+    clique,
+    compile_pattern,
+    cycle,
+    enumerate_subgraphs,
+    erdos_renyi,
+    triangle,
+    zipf_graph,
+)
+from repro.mpc.executors import DataplaneExecutor
+
+RESULTS_PATH = Path(
+    os.environ.get(
+        "BENCH_SUBGRAPH_RESULTS_PATH",
+        Path(__file__).resolve().parents[1] / "BENCH_subgraph.json",
+    )
+)
+
+
+def cases():
+    rng_z = np.random.default_rng(42)
+    zipf12k = zipf_graph(rng_z, 5000, 12000, skew=0.9)
+    rng_e = np.random.default_rng(7)
+    er2k = erdos_renyi(rng_e, 800, 2400)
+    rng_h = np.random.default_rng(11)
+    hubby = zipf_graph(rng_h, 150, 700, skew=2.0)
+    return [
+        # the acceptance pair: ≥10k-edge Zipf, triangle + 4-clique
+        ("triangle-zipf12k", zipf12k, triangle(), 8),
+        ("clique4-zipf12k", zipf12k, clique(4), 2),
+        # ER 4-cycle: incomplete orientation → injectivity + dedup both active
+        ("cycle4-er2k", er2k, cycle(4), 4),
+        # strongly skewed small graph: hubs are heavy → cross/CP stages
+        ("triangle-hubs", hubby, triangle(), 24),
+    ]
+
+
+def run(report):
+    import jax
+
+    p_plan = 8
+    n_dev = len(jax.devices())
+    records = []
+    for name, g, pat, lam in cases():
+        t0 = time.time()
+        brute = brute_force_occurrences(g, pat)
+        brute_us = (time.time() - t0) * 1e6
+
+        t0 = time.time()
+        sim = enumerate_subgraphs(g, pat, p=p_plan, backend="simulator", lam=lam)
+        sim_us = (time.time() - t0) * 1e6
+        assert np.array_equal(sim.occurrences, brute), (name, sim.count, len(brute))
+        report(
+            f"subgraph/{name}/simulator", sim_us,
+            f"V={g.n_vertices} E={g.n_edges} occ={sim.count} "
+            f"emb={sim.embeddings} load={sim.engine.load} "
+            f"bound={sim.engine.bound:.0f}",
+        )
+
+        ex = DataplaneExecutor()
+        t0 = time.time()
+        dp = enumerate_subgraphs(
+            g, pat, p=p_plan, backend="dataplane", lam=lam, executor=ex
+        )
+        cold_us = (time.time() - t0) * 1e6
+        assert np.array_equal(dp.occurrences, brute), (name, dp.count, len(brute))
+        warm_samples = []
+        for _ in range(3):
+            t0 = time.time()
+            warm = enumerate_subgraphs(
+                g, pat, p=p_plan, backend="dataplane", lam=lam, executor=ex
+            )
+            warm_samples.append((time.time() - t0) * 1e6)
+        warm_us = min(warm_samples)
+        e = dp.engine
+        report(
+            f"subgraph/{name}/dataplane", warm_us,
+            f"devices={n_dev} cold_us={cold_us:.0f} occ={dp.count} "
+            f"retries={e.retries} dispatches={e.dispatches} "
+            f"jit_misses={e.jit_cache_misses} brute_us={brute_us:.0f}",
+        )
+        records.append(
+            {
+                "case": name,
+                "pattern": pat.name,
+                "n_vertices": g.n_vertices,
+                "n_edges": g.n_edges,
+                "lam": lam,
+                "count": int(dp.count),
+                "embeddings": int(dp.embeddings),
+                "brute_us": round(brute_us, 1),
+                "sim_load": int(sim.engine.load),
+                "sim_us": round(sim_us, 1),
+                "dataplane_cold_us": round(cold_us, 1),
+                "dataplane_warm_us": round(warm_us, 1),
+                "dataplane_retries": int(e.retries),
+                "dataplane_dispatches": int(e.dispatches),
+                "dataplane_jit_misses": int(e.jit_cache_misses),
+            }
+        )
+
+    snapshot = {
+        "bench": "subgraph",
+        "p_plan": p_plan,
+        "device_count": n_dev,
+        "cases": records,
+    }
+    history = []
+    if RESULTS_PATH.exists():
+        try:
+            history = json.loads(RESULTS_PATH.read_text())
+            if not isinstance(history, list):
+                history = [history]
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(snapshot)
+    RESULTS_PATH.write_text(json.dumps(history, indent=2) + "\n")
+    report(
+        "subgraph/json", 0.0,
+        f"snapshot {len(history)} appended to {RESULTS_PATH.name}",
+    )
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    run(lambda name, us, derived="": print(f"{name},{us:.1f},{derived}"))

@@ -1,9 +1,13 @@
-"""Diff the latest two BENCH_program_backends.json snapshots.
+"""Diff the latest two snapshots of a BENCH_*.json history.
 
 Prints a per-case table of warm/cold wall-clock and retry deltas between the
-two most recent snapshots appended by ``bench_program_backends`` and exits
-non-zero when any case's *warm* time regressed beyond the threshold — the CI
-regression gate for the stage-batched dataplane scheduler.
+two most recent snapshots of the selected benchmark and exits non-zero when
+any case's *warm* time regressed beyond the threshold — the CI regression
+gate.  ``--bench`` selects the history (``program_backends`` default,
+``subgraph`` for the enumeration workload); any bench whose snapshots carry
+``dataplane_warm_us`` / ``dataplane_cold_us`` / ``dataplane_retries`` per
+case plugs in unchanged, with the default results file ``BENCH_<bench>.json``
+at the repo root.
 
 Warm time is the gate (it is the steady-state figure of merit and the least
 noisy); cold time and retries are reported for context only, since cold is
@@ -12,8 +16,8 @@ are only meaningful between snapshots from the *same machine* — the CI job
 produces both snapshots on one runner (base ref, then head ref) instead of
 diffing against a committed snapshot from developer hardware.
 
-    PYTHONPATH=src python benchmarks/compare_bench.py [--threshold 0.25]
-        [--results PATH] [--strict]
+    PYTHONPATH=src python benchmarks/compare_bench.py [--bench subgraph]
+        [--threshold 0.25] [--results PATH] [--strict]
 
 Exit status: 0 = no warm regression beyond threshold (or, without --strict,
 nothing to gate), 1 = regression detected, 2 = --strict and the results file
@@ -28,10 +32,10 @@ import json
 import sys
 from pathlib import Path
 
-DEFAULT_RESULTS = Path(__file__).resolve().parents[1] / "BENCH_program_backends.json"
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
-def load_snapshots(path: Path):
+def load_snapshots(path: Path, bench: str):
     try:
         history = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as e:
@@ -39,7 +43,7 @@ def load_snapshots(path: Path):
         return []
     if not isinstance(history, list):
         history = [history]
-    return [s for s in history if s.get("bench") == "program_backends"]
+    return [s for s in history if s.get("bench") == bench]
 
 
 def index_cases(snapshot):
@@ -84,7 +88,14 @@ def compare(prev, curr, threshold: float):
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--results", type=Path, default=DEFAULT_RESULTS)
+    ap.add_argument(
+        "--bench", default="program_backends",
+        help="benchmark history to diff (program_backends | subgraph | ...)",
+    )
+    ap.add_argument(
+        "--results", type=Path, default=None,
+        help="snapshot file (default: BENCH_<bench>.json at the repo root)",
+    )
     ap.add_argument(
         "--threshold", type=float, default=0.25,
         help="max tolerated relative warm-time regression per case (0.25 = +25%%)",
@@ -95,8 +106,10 @@ def main(argv=None) -> int:
         "a missing baseline means the benchmark pipeline is broken, not green",
     )
     args = ap.parse_args(argv)
+    if args.results is None:
+        args.results = REPO_ROOT / f"BENCH_{args.bench}.json"
 
-    snapshots = load_snapshots(args.results)
+    snapshots = load_snapshots(args.results, args.bench)
     if len(snapshots) < 2:
         print(
             f"compare_bench: {len(snapshots)} snapshot(s) in {args.results.name} "

@@ -27,6 +27,7 @@ def main() -> None:
         bench_oneround_baseline,
         bench_program_backends,
         bench_roofline,
+        bench_subgraph,
     )
 
     modules = [
@@ -38,6 +39,7 @@ def main() -> None:
         ("lambda", bench_lambda),                # λ-constant ablation (Sec. 6)
         ("kernels", bench_kernels),              # Pallas kernels
         ("program_backends", bench_program_backends),  # IR: sim load vs device wall-clock
+        ("subgraph", bench_subgraph),            # Sec. 1.4 corollary workload
         ("roofline", bench_roofline),            # §Roofline table from dry-run
     ]
 

@@ -1,0 +1,53 @@
+"""Subgraph enumeration end to end (paper Sec. 1.4): every occurrence of a
+constant-size pattern, exactly once, via the Theorem 6.2 join.
+
+The pipeline: pattern → JoinQuery (each pattern edge binds one shared copy of
+the graph's degree-oriented edge table), MPC join on either executor, then
+injectivity filter + automorphic dedup.  Cliques are fully oriented (no
+duplicates ever materialize); patterns with leftover symmetry (cycles, stars)
+fall back to canonical dedup.
+
+    PYTHONPATH=src python examples/enumerate_subgraphs.py
+"""
+
+import numpy as np
+
+from repro.graph import (
+    clique,
+    cycle,
+    enumerate_subgraphs,
+    from_edge_list,
+    triangle,
+    zipf_graph,
+)
+
+
+def main():
+    rng = np.random.default_rng(1)
+    g = zipf_graph(rng, n_vertices=1200, n_edges=4000, skew=1.0)
+    print(f"graph: |V|={g.n_vertices} |E|={g.n_edges} max_deg={g.degrees().max()}")
+
+    for pat, lam in [(triangle(), 8), (cycle(4), 4), (clique(4), 4)]:
+        res = enumerate_subgraphs(g, pat, p=16, backend="simulator", lam=lam)
+        eng = res.engine
+        o = res.compiled.orientation
+        print(
+            f"[{pat.name:8s}] occurrences={res.count:6d} "
+            f"(raw embeddings={res.embeddings}, "
+            f"orientation {'complete' if o.complete else f'partial {o.constraints}'}) "
+            f"load={eng.load} vs bound {eng.bound:.0f}"
+        )
+
+    # the same enumeration on the JAX dataplane (device mesh)
+    dp = enumerate_subgraphs(g, triangle(), p=16, backend="dataplane", lam=8)
+    print(f"[dataplane] triangle occurrences={dp.count} "
+          f"(retries={dp.engine.retries}, dispatches={dp.engine.dispatches})")
+
+    # arbitrary patterns: the "paw" (triangle with a pendant edge)
+    paw = from_edge_list([(0, 1), (1, 2), (0, 2), (0, 3)], name="paw")
+    res = enumerate_subgraphs(g, paw, p=16, backend="simulator", lam=8)
+    print(f"[{paw.name:8s}] occurrences={res.count}")
+
+
+if __name__ == "__main__":
+    main()

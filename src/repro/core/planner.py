@@ -140,10 +140,20 @@ def step3_allocation(
 
 def grid_dims(sizes: Sequence[int], p_grid: int) -> Tuple[List[int], int, float]:
     """Lemma 3.1 geometry: given |R_1| ≥ ... ≥ |R_t| and p machines, choose t' and the
-    grid p_1 × ... × p_{t'}. Returns (dims for the first t' lists, t', L_{t'})."""
+    grid p_1 × ... × p_{t'}. Returns (dims for the first t' lists, t', L_{t'}).
+
+    Invariant (the Lemma 3.1 machine budget): Π dims ≤ p_grid and every dim ≥ 1,
+    unconditionally — the rounding guard only ever decrements dims that are > 1,
+    so a dimension can never reach 0 and the worst case is the all-ones grid
+    (product 1 ≤ p_grid).  The previous guard decremented the overall max and
+    clamped afterwards, which could reinstate Π dims > p_grid after driving a
+    dimension to 0."""
     t = len(sizes)
+    if p_grid < 1:
+        raise ValueError(f"p_grid must be >= 1, got {p_grid}")
+    if t == 0 or any(s <= 0 for s in sizes):
+        raise ValueError("empty list ⇒ empty CP; caller must skip")
     assert all(sizes[i] >= sizes[i + 1] for i in range(t - 1)), "sizes must be sorted desc"
-    assert all(s > 0 for s in sizes), "empty list ⇒ empty CP; caller must skip"
 
     def load_i(i: int) -> float:  # L_i = (Π_{j≤i} |R_j| / p)^{1/i}
         prod = 1.0
@@ -157,10 +167,16 @@ def grid_dims(sizes: Sequence[int], p_grid: int) -> Tuple[List[int], int, float]
             t_prime = i
     l_t = max(load_i(t_prime), 1.0)
     dims = [max(1, int(sizes[i] // l_t)) for i in range(t_prime)]
-    # rounding guard: keep Π dims ≤ p_grid
+    # rounding guard: decrement the largest dim that is still > 1 (identical
+    # choice to the old guard while the max exceeds 1, so established grids
+    # are unchanged) until the budget holds.
     while math.prod(dims) > p_grid:
-        dims[dims.index(max(dims))] -= 1
-    dims = [max(1, d) for d in dims]
+        i_dec = max(
+            (i for i, d in enumerate(dims) if d > 1), key=lambda i: dims[i], default=None
+        )
+        if i_dec is None:
+            break  # all dims are 1 ⇒ product is 1 ≤ p_grid
+        dims[i_dec] -= 1
     return dims, t_prime, l_t
 
 

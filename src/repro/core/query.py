@@ -34,18 +34,30 @@ class Relation:
 
     ``data`` has shape (n, arity); column j holds values of ``scheme[j]``.
     Tuples are sets — constructors dedup rows.
+
+    ``table`` optionally names the *physical* table behind this logical
+    relation: self-join-shaped queries (e.g. the subgraph-enumeration
+    reduction, where every pattern edge binds a copy of the graph's edge set)
+    give all copies the same ``table`` id and the same ``data`` object, and
+    backends place the shared tuples once instead of once per copy (the
+    shared-input Scatter path — see ``SimulatorExecutor.place_inputs``).
+    Statistics and planning still treat each copy as its own relation, as the
+    paper's m = Σ_e |R_e| accounting requires.
     """
 
     scheme: Tuple[Attr, ...]
     data: np.ndarray
+    table: Optional[str] = None
 
     @staticmethod
-    def make(scheme: Sequence[Attr], data: np.ndarray) -> "Relation":
+    def make(
+        scheme: Sequence[Attr], data: np.ndarray, table: Optional[str] = None
+    ) -> "Relation":
         scheme = tuple(scheme)
         data = np.asarray(data, dtype=np.int64).reshape(-1, len(scheme))
         if len(set(scheme)) != len(scheme):
             raise ValueError(f"duplicate attribute in scheme {scheme}")
-        return Relation(scheme=scheme, data=_dedup_rows(data))
+        return Relation(scheme=scheme, data=_dedup_rows(data), table=table)
 
     @property
     def arity(self) -> int:
@@ -149,15 +161,18 @@ def reference_join(query: JoinQuery) -> Relation:
     rels = list(query.relations)
     if not rels:
         raise ValueError("empty query")
-    # Greedy connected order: start from the smallest relation, prefer joins that share
-    # an attribute with the current intermediate (defer cartesian products).
+    # Greedy connected order: start from the smallest relation, prefer the join
+    # sharing the MOST attributes with the current intermediate (a 2-shared
+    # join filters instead of fanning out — on a clique pattern it closes
+    # triangles instead of growing Σ deg^k star intermediates), cartesian
+    # products only when the remainder is disconnected.
     rels.sort(key=len)
     first = rels.pop(0)
     scheme, rows = first.scheme, first.data
     while rels:
-        j = next(
-            (i for i, r in enumerate(rels) if set(r.scheme) & set(scheme)),
-            0,
+        j = max(
+            range(len(rels)),
+            key=lambda i: len(set(rels[i].scheme) & set(scheme)) * len(rels) - i,
         )
         scheme, rows = _hash_join(scheme, rows, rels.pop(j))
     out_attrs = query.attset

@@ -215,14 +215,54 @@ def heavy_pair_present(
     return stats.pair.get(key, 0) > 0
 
 
+def heavy_masks(
+    query: JoinQuery, stats: HeavyStats
+) -> Dict[Edge, Tuple[np.ndarray, np.ndarray]]:
+    """Per-edge (hx, hy) heavy masks, computed once per run.
+
+    A stage-heavy program calls :func:`residual_relations` once per (H, η)
+    stage; without this cache every call recomputes the same O(m) masks.
+    Relations sharing a physical ``table`` additionally share the mask of any
+    (attribute, column) they have in common — the self-join fast path: k
+    pattern-edge copies of one edge set pay for each distinct mask once.
+    Sharing is guarded by the same data check as the shared-input Scatter
+    (``place_inputs``): a stray relation reusing a table id with different
+    tuples falls back to its own mask instead of silently borrowing one."""
+    cache: Dict[Tuple[str, Attr, int], Tuple[np.ndarray, np.ndarray]] = {}
+    out: Dict[Edge, Tuple[np.ndarray, np.ndarray]] = {}
+    for rel in query.relations:
+        ms = []
+        for col, attr in enumerate(rel.scheme):
+            key = (rel.table, attr, col) if rel.table is not None else None
+            m = None
+            if key is not None and key in cache:
+                data_ref, cached = cache[key]
+                if data_ref is rel.data or np.array_equal(data_ref, rel.data):
+                    m = cached
+            if m is None:
+                m = stats.is_heavy(attr, rel.data[:, col])
+                if key is not None and key not in cache:
+                    cache[key] = (rel.data, m)
+            ms.append(m)
+        out[rel.edge] = (ms[0], ms[1])
+    return out
+
+
 def residual_relations(
-    query: JoinQuery, stats: HeavyStats, plan: HPlan, eta: Configuration
+    query: JoinQuery,
+    stats: HeavyStats,
+    plan: HPlan,
+    eta: Configuration,
+    masks: Optional[Dict[Edge, Tuple[np.ndarray, np.ndarray]]] = None,
 ) -> Optional[Dict[Tuple[Edge, Tuple[Attr, ...]], Relation]]:
     """Materialize Q'(η) in one process (oracle path for tests; the distributed path
     lives in repro.mpc.engine). Returns None if some inactive edge rules η out.
 
     Key: (original edge e, residual scheme e') — distinct cross edges can produce
     distinct unary relations over the same attribute, so e is part of the key.
+
+    ``masks`` optionally supplies precomputed :func:`heavy_masks` so a caller
+    evaluating many configurations does not recompute them per stage.
     """
     h = set(plan.h_set)
     out: Dict[Tuple[Edge, Tuple[Attr, ...]], Relation] = {}
@@ -234,8 +274,11 @@ def residual_relations(
                 return None
             continue
         x_attr, y_attr = rel.scheme
-        hx = stats.is_heavy(x_attr, rel.column(x_attr))
-        hy = stats.is_heavy(y_attr, rel.column(y_attr))
+        if masks is not None:
+            hx, hy = masks[e]
+        else:
+            hx = stats.is_heavy(x_attr, rel.column(x_attr))
+            hy = stats.is_heavy(y_attr, rel.column(y_attr))
         if len(inter) == 0:
             sel = ~hx & ~hy
             out[(e, rel.scheme)] = Relation.make(rel.scheme, rel.data[sel])

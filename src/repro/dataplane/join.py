@@ -43,15 +43,20 @@ def local_sorted_join(
     a_rows: jax.Array, a_count: jax.Array,      # (capA, wa): join key in col ka
     b_rows: jax.Array, b_count: jax.Array,      # (capB, wb): join key in col kb
     ka: int, kb: int, cap_out: int,
+    a_keys: Optional[jax.Array] = None,         # optional precomputed (capA,)
+    b_keys: Optional[jax.Array] = None,         # join keys (pads may be any value)
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """→ (out (cap_out, wa+wb-1), count, overflow). Key written once (A's columns,
-    then B's non-key columns)."""
+    then B's non-key columns).  ``a_keys``/``b_keys`` override the key columns
+    (composite-key joins rank their key tuples densely and pass the ranks)."""
     capa, wa = a_rows.shape
     capb, wb = b_rows.shape
     big = jnp.iinfo(jnp.int32).max
 
-    a_keys = jnp.where(jnp.arange(capa) < a_count, a_rows[:, ka], big)
-    b_keys = jnp.where(jnp.arange(capb) < b_count, b_rows[:, kb], big)
+    a_keys = a_rows[:, ka] if a_keys is None else a_keys
+    b_keys = b_rows[:, kb] if b_keys is None else b_keys
+    a_keys = jnp.where(jnp.arange(capa) < a_count, a_keys, big)
+    b_keys = jnp.where(jnp.arange(capb) < b_count, b_keys, big)
     a_ord = jnp.argsort(a_keys)
     b_ord = jnp.argsort(b_keys)
     a_sorted = a_rows[a_ord]
@@ -125,35 +130,71 @@ def local_semijoin(
     return _compact_prefix(rows_s, member)
 
 
+def _composite_rank_keys(
+    a_cols: Sequence[jax.Array], a_valid: jax.Array,
+    b_cols: Sequence[jax.Array], b_valid: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Dense lexicographic rank of key *tuples* across both sides.
+
+    Equal tuples (on either side) get equal ranks, so a single-column sorted
+    join on the ranks is exactly the multi-column equi-join.  Ranks fit int32
+    (< capA + capB); invalid rows sort last and never produce a rank that a
+    valid row carries, so the caller's sentinel masking stays correct."""
+    na = a_valid.shape[0]
+    big = jnp.iinfo(jnp.int32).max
+    valid = jnp.concatenate([a_valid, b_valid])
+    cols = [
+        jnp.where(valid, jnp.concatenate([ac, bc]), big)
+        for ac, bc in zip(a_cols, b_cols)
+    ]
+    order = jnp.lexsort(tuple(reversed(cols)))   # lexsort: LAST key is primary
+    scols = [c[order] for c in cols]
+    diff = scols[0][1:] != scols[0][:-1]
+    for c in scols[1:]:
+        diff = diff | (c[1:] != c[:-1])
+    first = jnp.concatenate([jnp.ones((1,), bool), diff])
+    gid = (jnp.cumsum(first) - 1).astype(jnp.int32)
+    ranks = jnp.zeros_like(gid).at[order].set(gid)
+    return ranks[:na], ranks[na:]
+
+
 def local_join_filtered(
     a_rows: jax.Array, a_count: jax.Array,
     b_rows: jax.Array, b_count: jax.Array,
     ka: int, kb: int, cap_out: int,
     dup_pairs: Tuple[Tuple[int, int], ...] = (),
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """`local_sorted_join` plus equality filtering on duplicated attributes.
+    """`local_sorted_join` with duplicated attributes folded into the key.
 
     ``dup_pairs`` lists (a_col, b_col) pairs (b_col ≠ kb) of attributes shared
-    beyond the join key — the cyclic-subquery case.  Matching rows are kept,
-    the duplicate B-side columns dropped; output scheme is A's columns then
-    B's columns minus kb and minus the dup b_cols."""
-    out, cnt, ovf = local_sorted_join(a_rows, a_count, b_rows, b_count, ka, kb, cap_out)
-    if not dup_pairs:       # nothing to filter; compaction would be the identity
-        return out, cnt, ovf
-    wa = a_rows.shape[1]
-    wb = b_rows.shape[1]
+    beyond the join key — the cyclic-subquery case.  The full key tuple
+    (key, dup_1, dup_2, ...) is ranked densely via ``_composite_rank_keys``
+    and the join runs on the ranks, so ``cap_out`` (and the output-overflow
+    channel) meters only TRUE matches.  The previous implementation
+    materialized the key-only join and equality-filtered afterwards, which
+    made the capacity requirement the per-cell *cartesian* size — on
+    self-join-shaped queries (every LocalJoin chain level of a clique
+    pattern) that overflowed every reasonable output cap.  The duplicate
+    B-side columns are equal by construction and dropped; output scheme is
+    A's columns then B's columns minus kb and minus the dup b_cols."""
+    if not dup_pairs:
+        return local_sorted_join(a_rows, a_count, b_rows, b_count, ka, kb, cap_out)
+    capa, wa = a_rows.shape
+    capb, wb = b_rows.shape
+    a_valid = jnp.arange(capa) < a_count
+    b_valid = jnp.arange(capb) < b_count
+    a_keys, b_keys = _composite_rank_keys(
+        [a_rows[:, ka]] + [a_rows[:, ca] for ca, _ in dup_pairs], a_valid,
+        [b_rows[:, kb]] + [b_rows[:, cb] for _, cb in dup_pairs], b_valid,
+    )
+    out, cnt, ovf = local_sorted_join(
+        a_rows, a_count, b_rows, b_count, ka, kb, cap_out,
+        a_keys=a_keys, b_keys=b_keys,
+    )
     b_cols = [c for c in range(wb) if c != kb]
-    keep = jnp.arange(cap_out) < cnt
-    drop = set()
-    for ca, cb in dup_pairs:
-        co = wa + b_cols.index(cb)
-        keep &= out[:, ca] == out[:, co]
-        drop.add(co)
-    if drop:
-        keep_cols = [c for c in range(out.shape[1]) if c not in drop]
-        out = out[:, jnp.array(keep_cols, jnp.int32)]
-    out, cnt = _compact_prefix(out, keep)
-    return out, cnt, ovf
+    drop = {wa + b_cols.index(cb) for _, cb in dup_pairs}
+    keep_cols = [c for c in range(out.shape[1]) if c not in drop]
+    return out[:, jnp.array(keep_cols, jnp.int32)], cnt, ovf
 
 
 @lru_cache(maxsize=512)
@@ -355,8 +396,9 @@ def sharded_colocated_join(
     Lowers the LocalJoin op of the round-program IR: after `sharded_grid_route`
     every fragment of a virtual grid cell lives on device ``cell % p`` tagged
     with the cell id in column 0, so joining on the cell-id columns (with
-    ``dup_pairs`` equality-filtering the attributes shared inside the cell)
-    reproduces each cell's local join without moving a byte.  Returns
+    ``dup_pairs`` folding the attributes shared inside the cell into the
+    composite join key) reproduces each cell's local join without moving a
+    byte.  Returns
     (out (p, cap_out, w), counts (p,), overflow (p, 2) [always-0 slot, out])."""
     fn = _colocated_join_fn(mesh, axis_name, ka, kb, cap_out, tuple(dup_pairs))
     return fn(a_global, a_counts, b_global, b_counts)

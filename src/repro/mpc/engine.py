@@ -23,6 +23,7 @@ from typing import Optional, Sequence
 from ..core.hypergraph import fractional_edge_cover
 from ..core.planner import heavy_parameter
 from ..core.query import Attr, JoinQuery
+from ..core.taxonomy import HeavyStats
 from .executors import MPCJoinResult, SimulatorExecutor
 from .program import compile_plan
 from .simulator import MPCSimulator
@@ -37,21 +38,28 @@ def mpc_join(
     materialize: bool = True,
     h_subsets: Optional[Sequence[Sequence[Attr]]] = None,
     fuse_semijoin: bool = False,
+    stats: Optional[HeavyStats] = None,
 ) -> MPCJoinResult:
     """Run the full Theorem 6.2 algorithm on p simulated machines.
 
     ``h_subsets`` restricts the taxonomy to specific H sets (testing); default = all.
     ``fuse_semijoin`` enables the beyond-paper round fusion (a program-rewrite
     pass; see :func:`repro.mpc.program.fuse_semijoin_pass` and EXPERIMENTS §Perf).
+    ``stats`` optionally injects a precomputed histogram (e.g. the centralized
+    ``compute_stats`` oracle, or one shared across repeated runs); by default
+    the 3 metered rounds of the distributed protocol produce it.  Relations
+    sharing a physical ``Relation.table`` are placed once by the shared-input
+    Scatter path (self-join-shaped queries such as the subgraph reduction).
     """
     rho_val = float(fractional_edge_cover(query.hypergraph)[0])
     if lam is None:
-        lam = heavy_parameter(p, rho_val)
+        lam = heavy_parameter(p, rho_val) if stats is None else stats.lam
 
     sim = MPCSimulator(p, seed=seed)
     executor = SimulatorExecutor(sim, seed=seed)
     executor.place_inputs(query)                      # Scatter semantics
-    stats = distributed_stats(sim, query, lam)        # 3 metered histogram rounds
+    if stats is None:
+        stats = distributed_stats(sim, query, lam)    # 3 metered histogram rounds
     program = compile_plan(
         query, stats, p, h_subsets=h_subsets, fuse_semijoin=fuse_semijoin
     )

@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.query import Attr, JoinQuery, Relation, reference_join
-from ..core.taxonomy import residual_relations
+from ..core.taxonomy import heavy_masks, residual_relations
 from .hypercube import route_hypercube
 from .program import (
     BroadcastSizes,
@@ -115,11 +115,35 @@ class SimulatorExecutor:
     # -- input placement (Scatter semantics; idempotent) ---------------------
 
     def place_inputs(self, query: JoinQuery, seed_offset: int = 17) -> None:
+        """Scatter every input relation evenly (Θ(m/p) per machine).
+
+        Shared-input path: relations carrying the same ``Relation.table`` id
+        and the same tuple set are physically one table (the subgraph
+        reduction binds k pattern edges to one edge set), so the tuples are
+        shuffled and placed ONCE and the per-edge ``("in", e)`` tags alias the
+        same numpy blocks — k logical copies cost one placement.  Aliasing is
+        invisible to the MPC accounting (Scatter is load-free initial
+        placement) and to downstream ops, which only ever read these tags;
+        it also matches the unshared behavior bit for bit, because every
+        relation was already scattered with the same seed."""
+        placed: Dict[str, Tuple[object, np.ndarray]] = {}
         for rel in query.relations:
-            if not self.sim.machines_with(("in", rel.edge)):
-                scatter_input(
-                    self.sim, ("in", rel.edge), rel.data, seed=self.seed + seed_offset
-                )
+            tag = ("in", rel.edge)
+            if self.sim.machines_with(tag):
+                continue
+            shared = placed.get(rel.table) if rel.table is not None else None
+            if shared is not None and (
+                shared[1] is rel.data or np.array_equal(shared[1], rel.data)
+            ):
+                src = shared[0]
+                for mid in range(self.sim.p):
+                    parts = self.sim.stores[mid].get(src)
+                    if parts:
+                        self.sim.stores[mid][tag] = list(parts)
+                continue
+            scatter_input(self.sim, tag, rel.data, seed=self.seed + seed_offset)
+            if rel.table is not None and rel.table not in placed:
+                placed[rel.table] = (tag, rel.data)
 
     # -- program interpretation ----------------------------------------------
 
@@ -692,9 +716,10 @@ class DataplaneExecutor:
                        their `HyperCubeGrid` shares, every copy tagged with
                        its Lemma 3.2 virtual cell and exchanged by cell % p
       LocalJoin        a chain of communication-free `sharded_colocated_join`
-                       steps keyed on the cell column (shared attributes
-                       equality-filtered, CP lists appended as per-cell
-                       cartesian factors)
+                       steps keyed on the cell column (attributes shared
+                       beyond the cell folded into the join key by composite
+                       ranking, CP lists appended as per-cell cartesian
+                       factors)
 
     Every primitive call is *stage-batched*: the executor collects one work
     item per (stage, fragment), groups items into **geometry buckets** —
@@ -1027,8 +1052,12 @@ class DataplaneExecutor:
                             "+".join(sorted(group_kinds[it.group])),
                         )
                     )
-                for ch in tripped[id(it)]:   # double only the tripped channels
-                    it.caps[ch] *= 2
+                # grow only the tripped channels: ×2 on the first retry, ×4
+                # afterwards — a repeat trip means the guess was far off, and
+                # every extra attempt is a fresh trace+compile at a new shape,
+                # which costs far more than the padding it saves
+                for ch in tripped[id(it)]:
+                    it.caps[ch] *= 2 if it.attempt == 0 else 4
                 it.attempt += 1
                 if it.attempt > self.max_retries:
                     raise RuntimeError(
@@ -1052,10 +1081,13 @@ class DataplaneExecutor:
         from ..dataplane.exchange import blockify
 
         query, stats = program.query, program.stats
+        masks = heavy_masks(query, stats)   # once per run, not once per stage
         staged_states = []
         for state in states:
             plan = state.stage.plan
-            residuals = residual_relations(query, stats, plan, state.stage.cfg.eta)
+            residuals = residual_relations(
+                query, stats, plan, state.stage.cfg.eta, masks=masks
+            )
             if residuals is None:
                 raise RuntimeError(
                     f"stage {state.skey} compiled for an infeasible η — compiler bug"
@@ -1433,11 +1465,17 @@ class DataplaneExecutor:
     def _lower_local_join(self, program, states, op) -> None:
         """Communication-free output: all fragments of a virtual cell live on
         device cell % p, so the per-cell join is a chain of colocated joins on
-        the cell column — shared attributes equality-filtered via dup_pairs,
-        disconnected components and CP lists combined as in-cell cartesian
-        factors.  Each chain level batches every stage still joining; a
+        the cell column — attributes shared beyond the cell are folded into
+        the join key via dup_pairs (composite rank keys, so cap_out meters
+        true matches), disconnected components and CP lists combined as
+        in-cell cartesian factors.  Each chain level batches every stage still joining; a
         stage's chain advances as soon as its level lands (counts feed the
-        next level's capacity guess)."""
+        next level's capacity guess).  The chain is ordered greedily by
+        connectivity: each level joins the fragment sharing the most
+        attributes with the accumulated intermediate (self-join-shaped
+        queries expose the difference — on a clique pattern a 2-shared join
+        *filters* wedges into triangles, where the old lexicographic order
+        grew Σ deg^k star intermediates that overflowed every output cap)."""
         from ..dataplane.exchange import unblockify
         from ..dataplane.join import batched_sharded_colocated_join
 
@@ -1452,6 +1490,20 @@ class DataplaneExecutor:
                 break
             items: List[_WorkItem] = []
             for state in active:
+                a_scheme = state.parts[0][0]
+                # most-shared-attributes partner (ties → first, so programs
+                # without multi-shared fragments keep the old chain exactly)
+                n_parts = len(state.parts)
+                j_best = max(
+                    range(1, n_parts),
+                    key=lambda j: len(
+                        [a for a in a_scheme[1:] if a in state.parts[j][0]]
+                    ) * n_parts - j,
+                )
+                if j_best != 1:
+                    state.parts[1], state.parts[j_best] = (
+                        state.parts[j_best], state.parts[1],
+                    )
                 a_scheme, a_blocks, a_cnts, n_a = state.parts[0]
                 b_scheme, b_blocks, b_cnts, n_b = state.parts[1]
                 common = [a for a in a_scheme[1:] if a in b_scheme]

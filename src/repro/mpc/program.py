@@ -78,7 +78,9 @@ class Scatter(RoundOp):
     """Even initial placement of every input relation (Θ(m/p) per machine).
     Costs no load in the MPC model; backends that already hold the inputs
     (e.g. because the statistics preprocessing placed them) treat it as a
-    no-op."""
+    no-op.  Relations sharing a physical ``Relation.table`` (self-join-shaped
+    queries, e.g. the subgraph-enumeration reduction) are placed once and
+    aliased per edge — the shared-input Scatter path."""
 
     seed_offset: int = 17
 

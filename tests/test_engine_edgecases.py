@@ -1,0 +1,183 @@
+"""Engine edge cases the subgraph workload flushed out.
+
+* Empty-relation queries must compile and return empty results on BOTH
+  executors — including a stage whose isolated R''_X list is empty (the
+  ``geo.skip`` path that guards the ``grid_dims`` "caller must skip"
+  contract) — instead of asserting anywhere in the planner.
+* Singleton relations (p ≫ rows) must join correctly.
+* Self-join edge identity: k logical copies of one physical edge set must get
+  independent per-edge statistics from the distributed protocol, with
+  ``m_global`` counting every copy once (Sec. 6's m = Σ_e |R_e|), matching
+  the centralized oracle — with and without the shared-input Scatter.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.query import JoinQuery, Relation, hub_star_query, reference_join
+from repro.core.taxonomy import compute_stats
+from repro.mpc.executors import DataplaneExecutor, SimulatorExecutor
+from repro.mpc.program import compile_plan
+from repro.mpc.simulator import MPCSimulator
+from repro.mpc.statistics import distributed_stats
+
+EMPTY = np.zeros((0, 2), np.int64)
+
+
+def run_both(q: JoinQuery, lam: int, p: int = 4):
+    stats = compute_stats(q, lam)
+    program = compile_plan(q, stats, p)
+    sim = SimulatorExecutor(p=p).run(program)
+    dp = DataplaneExecutor().run(program)
+    oracle = reference_join(q)
+    assert sim.count == len(oracle)
+    assert dp.count == sim.count
+    assert dp.per_h_counts == sim.per_h_counts
+    assert sorted(map(tuple, dp.rows.tolist())) == sorted(
+        map(tuple, sim.rows.tolist())
+    )
+    return program, sim, dp
+
+
+# ---------------------------------------------------------------------------
+# Empty and singleton relations
+# ---------------------------------------------------------------------------
+
+
+def test_all_relations_empty():
+    q = JoinQuery.make(
+        [Relation.make(("A", "B"), EMPTY), Relation.make(("B", "C"), EMPTY)]
+    )
+    program, sim, dp = run_both(q, lam=4)
+    assert sim.count == 0
+    assert sim.rows.shape == (0, 3)
+    assert dp.rows.shape == (0, 3)
+
+
+def test_one_empty_relation_with_heavy_partner():
+    b = np.stack([np.full(50, 7), np.arange(50)], axis=1)   # heavy value 7
+    q = JoinQuery.make(
+        [Relation.make(("A", "B"), EMPTY), Relation.make(("B", "C"), b)]
+    )
+    program, sim, dp = run_both(q, lam=4)
+    assert sim.count == 0
+    assert len(program.stages) >= 1, "heavy B stages must still compile"
+
+
+def test_empty_isolated_piece_skips_cp_stage():
+    """Hub star with one leaf edge emptied: the H={hub} stage has isolated
+    attributes, and the empty leaf's R''_X list is empty — the stage must
+    skip (geo.skip) identically on both executors, never reaching grid_dims."""
+    q = hub_star_query(n=30, hub_n=20, dom_size=20)
+    rels = list(q.relations)
+    rels[2] = Relation.make(rels[2].scheme, EMPTY)
+    q = JoinQuery.make(rels)
+    program, sim, dp = run_both(q, lam=6)
+    iso_stages = [st for st in program.stages if st.plan.isolated]
+    assert iso_stages, "the hub configuration must compile an isolated stage"
+    # every isolated stage's X3 piece is empty ⇒ geo.skip ⇒ its H-key must
+    # contribute NO per-H entry on either backend (unlike ordinary
+    # zero-output stages, which contribute a 0)
+    skipped_hkeys = {st.hkey for st in iso_stages}
+    assert skipped_hkeys
+    for hkey in skipped_hkeys:
+        assert hkey not in sim.per_h_counts, (hkey, sim.per_h_counts)
+        assert hkey not in dp.per_h_counts, (hkey, dp.per_h_counts)
+
+
+def test_empty_relation_via_mpc_join_entrypoint():
+    from repro.mpc.engine import mpc_join
+
+    q = JoinQuery.make(
+        [Relation.make(("A", "B"), EMPTY), Relation.make(("B", "C"), EMPTY)]
+    )
+    res = mpc_join(q, p=4)
+    assert res.count == 0 and res.rows.shape == (0, 3)
+
+
+def test_singleton_relations():
+    q = JoinQuery.make(
+        [
+            Relation.make(("A", "B"), np.array([[1, 2]], np.int64)),
+            Relation.make(("B", "C"), np.array([[2, 3]], np.int64)),
+        ]
+    )
+    program, sim, dp = run_both(q, lam=2, p=8)
+    assert sim.count == 1
+    assert sim.rows.tolist() == [[1, 2, 3]]
+
+
+# ---------------------------------------------------------------------------
+# Self-join edge identity (two copies of one physical table)
+# ---------------------------------------------------------------------------
+
+
+def _two_copy_query(shared: bool) -> JoinQuery:
+    rng = np.random.default_rng(5)
+    # skewed so heavy values exist: planted hub 99 + uniform noise
+    planted = np.stack([np.full(30, 99), np.arange(30)], axis=1)
+    tab = np.unique(
+        np.concatenate([planted, rng.integers(0, 40, (120, 2))]), axis=0
+    )
+    table = "edges" if shared else None
+    return JoinQuery.make(
+        [
+            Relation(scheme=("A", "B"), data=tab, table=table),
+            Relation(scheme=("B", "C"), data=tab, table=table),
+        ]
+    )
+
+
+@pytest.mark.parametrize("shared", [True, False])
+def test_selfjoin_distributed_stats_match_oracle(shared):
+    q = _two_copy_query(shared)
+    n_rows = len(q.relations[0])
+    lam = 8
+    sim = MPCSimulator(p=6, seed=0)
+    SimulatorExecutor(sim, seed=0).place_inputs(q)
+    dist = distributed_stats(sim, q, lam)
+    oracle = compute_stats(q, lam)
+
+    # m counts each copy once: 2 |E|
+    assert dist.m == oracle.m == 2 * n_rows
+    assert set(dist.heavy) == set(oracle.heavy)
+    for a in oracle.heavy:
+        assert np.array_equal(dist.heavy[a], oracle.heavy[a]), a
+    # per-edge records are keyed independently per copy
+    e1, e2 = (r.edge for r in q.relations)
+    assert dist.light_cnt[e1] == oracle.light_cnt[e1]
+    assert dist.light_cnt[e2] == oracle.light_cnt[e2]
+    assert dist.cond == oracle.cond
+    assert dist.pair == oracle.pair
+    # the copies' stats are independent: B is heavy-conditioned differently
+    # as column 1 of copy 1 vs column 0 of copy 2
+    cond_edges = {e for (e, _, _) in dist.cond}
+    if cond_edges:
+        assert cond_edges <= {e1, e2}
+
+
+def test_selfjoin_parity_with_centralized_oracle():
+    """Two-copy self-join end to end: distributed-stats engine run ≡ the
+    centralized-stats compile ≡ the reference join, shared and unshared."""
+    from repro.mpc.engine import mpc_join
+
+    results = {}
+    for shared in (True, False):
+        q = _two_copy_query(shared)
+        res = mpc_join(q, p=6, lam=8)
+        oracle = reference_join(q)
+        assert res.count == len(oracle), shared
+        results[shared] = (
+            res.count,
+            res.per_h_counts,
+            sorted(map(tuple, res.rows.tolist())),
+            res.sim.parallel_total_load,
+        )
+    # the shared-input Scatter is invisible to results AND to the metered load
+    assert results[True] == results[False]
+
+
+def test_selfjoin_dataplane_parity():
+    q = _two_copy_query(shared=True)
+    program, sim, dp = run_both(q, lam=8, p=6)
+    assert sim.count > 0, "self-join case must be non-trivial"

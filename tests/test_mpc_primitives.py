@@ -25,6 +25,56 @@ def test_grid_dims_small_tail():
     assert t_prime == 2
 
 
+def test_grid_dims_budget_invariant_adversarial():
+    """Regression for the rounding guard: Π dims ≤ p_grid must hold AFTER the
+    guard for adversarial size vectors (the old decrement-the-max + clamp
+    could drive a dimension to 0 and then reinstate Π dims > p_grid)."""
+    cases = [
+        ([7, 7, 7], 1),
+        ([5, 4], 2),
+        ([3, 3, 3, 3, 3], 2),
+        ([10**9, 10**9], 4),
+        ([2, 1, 1, 1], 1),
+        ([1], 1),
+        ([6, 6, 6], 5),
+        ([10**15, 10**15], 10**6),
+        ([13, 11, 7, 5, 3], 3),
+    ]
+    for sizes, p_grid in cases:
+        dims, t_prime, load = grid_dims(sizes, p_grid)
+        assert all(d >= 1 for d in dims), (sizes, p_grid, dims)
+        assert math.prod(dims) <= p_grid, (sizes, p_grid, dims)
+        assert len(dims) == t_prime
+
+
+def test_grid_dims_budget_invariant_fuzz():
+    rng = np.random.default_rng(0)
+    for _ in range(3000):
+        t = int(rng.integers(1, 6))
+        hi = int(rng.choice([8, 100, 10**4, 10**9]))
+        sizes = sorted(
+            (int(x) for x in rng.integers(1, hi, size=t)), reverse=True
+        )
+        p_grid = int(rng.integers(1, 200))
+        dims, t_prime, load = grid_dims(sizes, p_grid)
+        assert all(d >= 1 for d in dims)
+        assert math.prod(dims) <= p_grid, (sizes, p_grid, dims)
+
+
+def test_grid_dims_rejects_degenerate_inputs():
+    """Empty lists and non-positive sizes raise even under ``python -O``
+    (ValueError, not a bare assert): an empty CP list means the caller must
+    have skipped the stage (geo.skip)."""
+    with pytest.raises(ValueError):
+        grid_dims([], 4)
+    with pytest.raises(ValueError):
+        grid_dims([0], 4)
+    with pytest.raises(ValueError):
+        grid_dims([5, 0], 4)
+    with pytest.raises(ValueError):
+        grid_dims([3], 0)
+
+
 def test_cartesian_product_exact():
     rels = [
         Relation.make(("A",), np.arange(37).reshape(-1, 1)),
