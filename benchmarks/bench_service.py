@@ -1,0 +1,205 @@
+"""Cold-vs-warm submit latency and mixed-workload throughput of the join service.
+
+The service claim (docs/design/09-service.md): a warm repeat of any cached
+query through :class:`~repro.mpc.service.JoinSession` skips the planner LPs
+(plan LRU), every XLA trace+compile (executable cache), and every overflow
+retry (learned caps) — steady-state latency is the stage-batched dispatch
+cost alone.  This bench meters exactly that:
+
+  * per-shape cases (``triangle-hub``, ``star-hub-cp``, ``pattern-triangle``):
+    one cold submit (pays compile_plan + AOT jit), then best-of-3 warm
+    repeats through the same session — ``dataplane_cold_us`` vs
+    ``dataplane_warm_us`` is the figure the service exists for;
+  * ``mixed-workload``: three query shapes round-robin through ONE session —
+    round 1 is the cold sweep, rounds 2–3 are steady state; reports the mean
+    warm per-query latency (and queries/sec in the derived column).  This is
+    the serving regime: many shapes interleaved, every one warm after its
+    first visit.
+
+Every run appends a snapshot to ``BENCH_service.json`` (same shape as the
+other BENCH histories, so ``compare_bench.py --bench service`` gates warm
+regressions in CI).
+
+Run standalone with 8 fake host devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \\
+        PYTHONPATH=src python -m benchmarks.run --only service
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.query import (
+    disconnected_query,
+    hub_star_query,
+    hub_triangle_query,
+    reference_join,
+)
+from repro.mpc.service import JoinSession
+
+RESULTS_PATH = Path(
+    os.environ.get(
+        "BENCH_SERVICE_RESULTS_PATH",
+        Path(__file__).resolve().parents[1] / "BENCH_service.json",
+    )
+)
+
+WARM_REPEATS = 3
+
+
+def shape_cases():
+    return [
+        ("triangle-hub", hub_triangle_query(n=300, hub_n=80, dom_size=40, hub=10_000), 16),
+        ("star-hub-cp", hub_star_query(n=90, hub_n=40, dom_size=25), 10),
+    ]
+
+
+def _run_shape(session, q, lam, oracle_n):
+    # materialize=False on BOTH sides so cold-vs-warm isolates the service
+    # caches, not the device->host row pull (counts still oracle-checked)
+    cold = session.submit(q, lam=lam, materialize=False)
+    assert cold.count == oracle_n, (cold.count, oracle_n)
+    warm_samples = []
+    warm = None
+    for _ in range(WARM_REPEATS):
+        warm = session.submit(q, lam=lam, materialize=False)
+        warm_samples.append(warm.total_us)
+        assert warm.plan_cache_hit
+    return cold, warm, min(warm_samples)
+
+
+def run(report):
+    import jax
+
+    n_dev = len(jax.devices())
+    records = []
+
+    # -- per-shape cold vs warm ----------------------------------------------
+    for name, q, lam in shape_cases():
+        session = JoinSession(p=8, backend="dataplane")
+        oracle_n = len(reference_join(q))
+        cold, warm, warm_us = _run_shape(session, q, lam, oracle_n)
+        report(
+            f"service/{name}", warm_us,
+            f"cold_us={cold.total_us:.0f} jit_misses_cold={cold.jit_cache_misses} "
+            f"jit_misses_warm={warm.jit_cache_misses} warm_retries={warm.retries} "
+            f"compile_us={cold.compile_us:.0f}",
+        )
+        records.append(
+            {
+                "case": name,
+                "lam": lam,
+                "count": int(cold.count),
+                "dataplane_cold_us": round(cold.total_us, 1),
+                "dataplane_warm_us": round(warm_us, 1),
+                "dataplane_retries": int(warm.retries),
+                "compile_us": round(cold.compile_us, 1),
+                "jit_misses_cold": int(cold.jit_cache_misses),
+                "jit_misses_warm": int(warm.jit_cache_misses),
+            }
+        )
+
+    # -- session-backed subgraph enumeration ---------------------------------
+    from repro.graph import triangle, zipf_graph
+
+    g = zipf_graph(np.random.default_rng(0), n_vertices=800, n_edges=3200, skew=1.0)
+    session = JoinSession(p=8, backend="dataplane")
+    t0 = time.perf_counter()
+    first = session.submit_pattern(triangle(), g)
+    cold_us = (time.perf_counter() - t0) * 1e6
+    warm_samples = []
+    for _ in range(WARM_REPEATS):
+        t0 = time.perf_counter()
+        rep = session.submit_pattern(triangle(), g)
+        warm_samples.append((time.perf_counter() - t0) * 1e6)
+        assert rep.count == first.count
+    warm_us = min(warm_samples)
+    warm_engine = rep.engine
+    report(
+        "service/pattern-triangle", warm_us,
+        f"cold_us={cold_us:.0f} triangles={first.count} "
+        f"plan_hits={session.stats.plan_hits} "
+        f"jit_misses_warm={warm_engine.jit_cache_misses}",
+    )
+    records.append(
+        {
+            "case": "pattern-triangle",
+            "lam": None,
+            "count": int(first.count),
+            "dataplane_cold_us": round(cold_us, 1),
+            "dataplane_warm_us": round(warm_us, 1),
+            "dataplane_retries": int(warm_engine.retries),
+            "jit_misses_cold": None,
+            "jit_misses_warm": int(warm_engine.jit_cache_misses),
+        }
+    )
+
+    # -- mixed workload: three shapes round-robin through one session --------
+    shapes = [(n, q, lam) for n, q, lam in shape_cases()] + [
+        ("disconnected", disconnected_query(120, dom_size=14, skew=1.8), 8)
+    ]
+    session = JoinSession(p=8, backend="dataplane")
+    t0 = time.perf_counter()
+    for _, q, lam in shapes:                       # round 1: cold sweep
+        session.submit(q, lam=lam, materialize=False)
+    cold_round_us = (time.perf_counter() - t0) * 1e6
+    warm_lat, warm_retries = [], 0
+    for _ in range(2):                             # rounds 2-3: steady state
+        for _, q, lam in shapes:
+            r = session.submit(q, lam=lam, materialize=False)
+            assert r.plan_cache_hit
+            warm_lat.append(r.total_us)
+            warm_retries += r.retries
+    mean_warm_us = sum(warm_lat) / len(warm_lat)
+    qps = 1e6 / mean_warm_us if mean_warm_us else 0.0
+    report(
+        "service/mixed-workload", mean_warm_us,
+        f"cold_round_us={cold_round_us:.0f} shapes={len(shapes)} "
+        f"qps_warm={qps:.1f} jit_misses_total={session.stats.jit_misses} "
+        f"plan_hits={session.stats.plan_hits}",
+    )
+    records.append(
+        {
+            "case": "mixed-workload",
+            "lam": None,
+            "count": None,
+            "dataplane_cold_us": round(cold_round_us, 1),
+            "dataplane_warm_us": round(mean_warm_us, 1),
+            "dataplane_retries": int(warm_retries),
+            "qps_warm": round(qps, 2),
+            "jit_misses_total": int(session.stats.jit_misses),
+        }
+    )
+
+    snapshot = {
+        "bench": "service",
+        "p_sim": 8,
+        "device_count": n_dev,
+        "cases": records,
+    }
+    history = []
+    if RESULTS_PATH.exists():
+        try:
+            history = json.loads(RESULTS_PATH.read_text())
+            if not isinstance(history, list):
+                history = [history]
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(snapshot)
+    RESULTS_PATH.write_text(json.dumps(history, indent=2) + "\n")
+    report(
+        "service/json", 0.0,
+        f"snapshot {len(history)} appended to {RESULTS_PATH.name}",
+    )
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    run(lambda name, us, derived="": print(f"{name},{us:.1f},{derived}"))

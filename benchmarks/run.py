@@ -27,6 +27,7 @@ def main() -> None:
         bench_oneround_baseline,
         bench_program_backends,
         bench_roofline,
+        bench_service,
         bench_subgraph,
     )
 
@@ -40,6 +41,7 @@ def main() -> None:
         ("kernels", bench_kernels),              # Pallas kernels
         ("program_backends", bench_program_backends),  # IR: sim load vs device wall-clock
         ("subgraph", bench_subgraph),            # Sec. 1.4 corollary workload
+        ("service", bench_service),              # JoinSession cold vs warm
         ("roofline", bench_roofline),            # §Roofline table from dry-run
     ]
 

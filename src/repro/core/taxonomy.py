@@ -54,16 +54,41 @@ class HeavyStats:
         return sum(int(v.size) for v in self.heavy.values())
 
 
-def compute_stats(query: JoinQuery, lam: int) -> HeavyStats:
+def _unique_counts(rel: Relation, col: int, memo: Optional[Dict]):
+    """np.unique(column, return_counts=True) with an optional cross-query memo.
+
+    ``memo`` is keyed by (physical table id, column): queries in one service
+    batch that bind the same ``Relation.table`` share the sort behind the
+    unique-count pass — the expensive part of ``compute_stats`` — once per
+    table instead of once per query.  Guarded by the same data-identity check
+    as the shared-input Scatter, so a stray relation reusing a table id with
+    different tuples falls back to its own computation."""
+    if memo is None or rel.table is None:
+        return np.unique(rel.data[:, col], return_counts=True)
+    key = (rel.table, col)
+    hit = memo.get(key)
+    if hit is not None and (hit[0] is rel.data or np.array_equal(hit[0], rel.data)):
+        return hit[1]
+    out = np.unique(rel.data[:, col], return_counts=True)
+    if key not in memo:
+        memo[key] = (rel.data, out)
+    return out
+
+
+def compute_stats(
+    query: JoinQuery, lam: int, unique_memo: Optional[Dict] = None
+) -> HeavyStats:
     """Exact heavy statistics (the MPC protocol that distributes these is in
     repro.mpc.statistics; this is the ground-truth computation used by the planner
-    and by tests)."""
+    and by tests).  ``unique_memo`` optionally shares the per-table unique-count
+    pass across queries binding the same physical table (see
+    :func:`_unique_counts` — the service layer's batch path)."""
     m = query.m
     threshold = max(1, -(-m // lam))  # ceil(m / lam)
     heavy_sets: Dict[Attr, Set[int]] = {}
     for rel in query.relations:
-        for attr in rel.scheme:
-            vals, cnts = np.unique(rel.column(attr), return_counts=True)
+        for col, attr in enumerate(rel.scheme):
+            vals, cnts = _unique_counts(rel, col, unique_memo)
             hv = vals[cnts >= threshold]
             if hv.size:
                 heavy_sets.setdefault(attr, set()).update(hv.tolist())

@@ -12,6 +12,11 @@ Backends mirror the engine's executors:
   * ``"dataplane"`` — ``compile_plan`` + :class:`DataplaneExecutor` (stage-
     batched by default; pass ``executor=DataplaneExecutor(batch_stages=False)``
     for the per-stage schedule).
+
+Passing ``session=`` (a :class:`repro.mpc.service.JoinSession`) routes the
+join through the persistent service instead: repeated patterns over the same
+graph hit the session's plan cache and warm executor
+(``JoinSession.submit_pattern`` is the method-form of the same path).
 """
 
 from __future__ import annotations
@@ -79,20 +84,41 @@ def enumerate_subgraphs(
     executor=None,
     seed: int = 0,
     fuse_semijoin: bool = False,
+    session=None,
 ) -> EnumerationResult:
     """Enumerate every occurrence of ``pattern`` in ``graph`` via the join.
 
-    ``p`` is the plan's machine count (the dataplane maps it onto however
-    many devices the mesh has); ``lam`` defaults to the paper's
-    λ = Θ(p^{1/(2ρ)}).
+    Args:
+        graph: the data graph (its edge set becomes the shared physical table).
+        pattern: the pattern to enumerate (≤ 8 vertices).
+        p: the plan's machine count (the dataplane maps it onto however many
+            devices the mesh has).
+        backend: ``"simulator"`` or ``"dataplane"`` (ignored when ``session``
+            is given — the session's backend is used).
+        lam: heavy parameter; defaults to the paper's λ = Θ(p^{1/(2ρ)}).
+        orientation: vertex order behind the oriented table (``"degree"``/``"id"``).
+        executor: inject a configured :class:`DataplaneExecutor` (one-shot
+            dataplane path only).
+        seed: shared-randomness seed (one-shot simulator path only).
+        fuse_semijoin: enable the beyond-paper semi-join fusion rewrite.
+        session: a :class:`repro.mpc.service.JoinSession` to submit through —
+            the persistent-service path with cross-query plan/compile reuse.
+
+    Returns:
+        An :class:`EnumerationResult`: exactly-once ``occurrences`` plus the
+        engine run behind them.
     """
     compiled = compile_pattern(graph, pattern, orientation)
     q = compiled.query
+    if session is not None:
+        p, backend = session.p, session.backend    # the session's plans rule
     if lam is None:
         rho_val = float(fractional_edge_cover(q.hypergraph)[0])
         lam = heavy_parameter(p, rho_val)
 
-    if backend == "simulator":
+    if session is not None:
+        res = session.submit(q, lam=lam, fuse_semijoin=fuse_semijoin).result
+    elif backend == "simulator":
         from ..mpc.engine import mpc_join
 
         res = mpc_join(q, p=p, seed=seed, lam=lam, fuse_semijoin=fuse_semijoin)

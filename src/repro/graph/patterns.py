@@ -100,6 +100,7 @@ class Pattern:
 
 
 def triangle() -> Pattern:
+    """K_3 — the paper's canonical Sec. 1.4 example pattern."""
     return clique(3)
 
 

@@ -24,12 +24,16 @@ from .program import (
     SemiJoin,
     compile_plan,
     fuse_semijoin_pass,
+    histogram_signature,
+    plan_cache_key,
 )
 from .executors import (
     DataplaneExecutor,
     DataplaneJoinResult,
     DataplaneUnsupported,
+    ExecutableCache,
     MPCJoinResult,
     SimulatorExecutor,
 )
+from .service import JoinSession, ServiceStats, SessionResult
 from .engine import mpc_join

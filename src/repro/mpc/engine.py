@@ -11,23 +11,22 @@ physical rounds) now lives in two places:
                               for exact load metering, :class:`DataplaneExecutor`
                               for the JAX device mesh).
 
-``mpc_join`` is the historical entry point and is now a thin wrapper:
-scatter inputs, run the 3-round statistics protocol, compile, execute.
-Engine-level choices the paper leaves open are documented in docs/DESIGN.md §6.
+``mpc_join`` is the historical entry point and is now a one-shot
+:class:`~repro.mpc.service.JoinSession`: scatter inputs, run the 3-round
+statistics protocol, compile, execute, discard the session.  Long-lived
+callers should hold a ``JoinSession`` instead — it caches compiled plans and
+executor state across queries (docs/design/09-service.md).  Engine-level
+choices the paper leaves open are documented in docs/design/06-engine-choices.md.
 """
 
 from __future__ import annotations
 
 from typing import Optional, Sequence
 
-from ..core.hypergraph import fractional_edge_cover
-from ..core.planner import heavy_parameter
 from ..core.query import Attr, JoinQuery
 from ..core.taxonomy import HeavyStats
-from .executors import MPCJoinResult, SimulatorExecutor
-from .program import compile_plan
-from .simulator import MPCSimulator
-from .statistics import distributed_stats
+from .executors import MPCJoinResult
+from .service import JoinSession
 
 
 def mpc_join(
@@ -40,27 +39,40 @@ def mpc_join(
     fuse_semijoin: bool = False,
     stats: Optional[HeavyStats] = None,
 ) -> MPCJoinResult:
-    """Run the full Theorem 6.2 algorithm on p simulated machines.
+    """Run the full Theorem 6.2 algorithm once on p simulated machines.
 
-    ``h_subsets`` restricts the taxonomy to specific H sets (testing); default = all.
-    ``fuse_semijoin`` enables the beyond-paper round fusion (a program-rewrite
-    pass; see :func:`repro.mpc.program.fuse_semijoin_pass` and EXPERIMENTS §Perf).
-    ``stats`` optionally injects a precomputed histogram (e.g. the centralized
-    ``compute_stats`` oracle, or one shared across repeated runs); by default
-    the 3 metered rounds of the distributed protocol produce it.  Relations
-    sharing a physical ``Relation.table`` are placed once by the shared-input
-    Scatter path (self-join-shaped queries such as the subgraph reduction).
+    Args:
+        query: the join query (concrete relations attached).
+        p: number of simulated MPC machines.
+        seed: shared-randomness seed (scatter + routing hash family).
+        lam: heavy parameter λ; default Θ(p^{1/(2ρ)}) per the paper.
+        materialize: materialize result rows (False: counts/load only).
+        h_subsets: restrict the taxonomy to specific H sets (testing);
+            default = all subsets of attset(Q).
+        fuse_semijoin: enable the beyond-paper round fusion (a program-rewrite
+            pass; see :func:`repro.mpc.program.fuse_semijoin_pass`).
+        stats: inject a precomputed histogram (e.g. the centralized
+            ``compute_stats`` oracle, or one shared across repeated runs); by
+            default the 3 metered rounds of the distributed protocol produce
+            it.  Relations sharing a physical ``Relation.table`` are placed
+            once by the shared-input Scatter path.
+
+    Returns:
+        An :class:`~repro.mpc.executors.MPCJoinResult` with the exact join
+        count, per-H counts, materialized rows, and the metered simulator
+        (``result.load`` vs ``result.bound`` is the paper's claim).
+
+    This is the *one-shot* path: every artifact (plan, simulator ledger) is
+    per-call.  Repeated workloads should use
+    :class:`~repro.mpc.service.JoinSession`, which produces row-identical
+    results while caching plans across calls.
     """
-    rho_val = float(fractional_edge_cover(query.hypergraph)[0])
-    if lam is None:
-        lam = heavy_parameter(p, rho_val) if stats is None else stats.lam
-
-    sim = MPCSimulator(p, seed=seed)
-    executor = SimulatorExecutor(sim, seed=seed)
-    executor.place_inputs(query)                      # Scatter semantics
-    if stats is None:
-        stats = distributed_stats(sim, query, lam)    # 3 metered histogram rounds
-    program = compile_plan(
-        query, stats, p, h_subsets=h_subsets, fuse_semijoin=fuse_semijoin
-    )
-    return executor.run(program, materialize=materialize)
+    session = JoinSession(p=p, backend="simulator", seed=seed)
+    return session.submit(
+        query,
+        lam=lam,
+        stats=stats,
+        materialize=materialize,
+        h_subsets=h_subsets,
+        fuse_semijoin=fuse_semijoin,
+    ).result

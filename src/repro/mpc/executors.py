@@ -114,7 +114,12 @@ class SimulatorExecutor:
 
     # -- input placement (Scatter semantics; idempotent) ---------------------
 
-    def place_inputs(self, query: JoinQuery, seed_offset: int = 17) -> None:
+    def place_inputs(
+        self,
+        query: JoinQuery,
+        seed_offset: int = 17,
+        scatter_cache: Optional[Dict] = None,
+    ) -> None:
         """Scatter every input relation evenly (Θ(m/p) per machine).
 
         Shared-input path: relations carrying the same ``Relation.table`` id
@@ -125,7 +130,14 @@ class SimulatorExecutor:
         invisible to the MPC accounting (Scatter is load-free initial
         placement) and to downstream ops, which only ever read these tags;
         it also matches the unshared behavior bit for bit, because every
-        relation was already scattered with the same seed."""
+        relation was already scattered with the same seed.
+
+        ``scatter_cache`` extends the sharing *across* simulators: a
+        :class:`~repro.mpc.service.JoinSession` batch passes its session dict
+        keyed by (table, p, seed), and queries binding the same physical
+        table reuse the first query's shuffled placement instead of
+        re-shuffling — bit-identical, because ``scatter_input`` is
+        deterministic in (data, seed, p)."""
         placed: Dict[str, Tuple[object, np.ndarray]] = {}
         for rel in query.relations:
             tag = ("in", rel.edge)
@@ -141,7 +153,27 @@ class SimulatorExecutor:
                     if parts:
                         self.sim.stores[mid][tag] = list(parts)
                 continue
+            ckey = None
+            if scatter_cache is not None and rel.table is not None:
+                ckey = (rel.table, self.sim.p, self.seed + seed_offset)
+                hit = scatter_cache.get(ckey)
+                if hit is not None and (
+                    hit[0] is rel.data or np.array_equal(hit[0], rel.data)
+                ):
+                    for mid, parts in enumerate(hit[1]):
+                        if parts:
+                            self.sim.stores[mid][tag] = list(parts)
+                    placed.setdefault(rel.table, (tag, rel.data))
+                    continue
             scatter_input(self.sim, tag, rel.data, seed=self.seed + seed_offset)
+            if ckey is not None and ckey not in scatter_cache:
+                scatter_cache[ckey] = (
+                    rel.data,
+                    [
+                        list(self.sim.stores[mid].get(tag) or [])
+                        for mid in range(self.sim.p)
+                    ],
+                )
             if rel.table is not None and rel.table not in placed:
                 placed[rel.table] = (tag, rel.data)
 
@@ -626,6 +658,63 @@ class DataplaneUnsupported(NotImplementedError):
     the dataplane has not been taught about — loudly, never silently."""
 
 
+class ExecutableCache:
+    """Bounded LRU of AOT-compiled XLA executables, keyed by dispatch signature.
+
+    One entry per distinct fused-dispatch signature (mesh, axis, round, bucket
+    key, caps, padded stage count).  The cache outlives any single ``run()``
+    — by default all executors share one process-wide instance
+    (:data:`EXECUTABLE_CACHE`), so a long-lived service process re-executes
+    warm queries with zero recompiles.  Eviction is LRU: long-lived processes
+    running many distinct programs drop the oldest executables instead of
+    accumulating XLA binaries forever.
+
+    ``hits`` / ``misses`` / ``evictions`` meter the cache's whole lifetime
+    (per-run counts live on :class:`DataplaneJoinResult`)."""
+
+    def __init__(self, capacity: int = 1024):
+        from collections import OrderedDict
+
+        self.capacity = capacity
+        self._entries: "OrderedDict" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, sig) -> bool:
+        return sig in self._entries
+
+    def get(self, sig):
+        """Return the executable for ``sig`` (refreshing its LRU slot), or
+        None on a miss.  Counts lifetime hits/misses."""
+        exe = self._entries.get(sig)
+        if exe is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(sig)
+        self.hits += 1
+        return exe
+
+    def put(self, sig, exe) -> None:
+        self._entries[sig] = exe
+        self._entries.move_to_end(sig)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+#: default process-wide executable cache shared by every DataplaneExecutor —
+#: the jit half of the service layer's warm path (a JoinSession's repeat
+#: queries hit it even across executor instances).
+EXECUTABLE_CACHE = ExecutableCache(capacity=1024)
+
+
 def _salt(*key, attempt: int = 0) -> int:
     """Stable 31-bit salt for the routing hashes (shared randomness: every
     host derives the same salt from the stage key alone).  ``attempt`` threads
@@ -754,14 +843,10 @@ class DataplaneExecutor:
         LocalJoin: "_lower_local_join",
     }
 
-    #: process-wide AOT-compiled executable cache, keyed by the full static
-    #: signature of one fused dispatch (mesh, axis, round, bucket key, caps,
-    #: padded stage count).  An absent signature ⇒ trace+compile (a jit cache
-    #: miss); a present one executes directly.  Bounded LRU: long-lived
-    #: processes running many programs evict oldest executables instead of
-    #: accumulating XLA binaries forever.
-    _compiled: "OrderedDict" = None
-    _COMPILED_CAPACITY = 1024
+    #: executor-lifetime learned-caps entries kept before LRU eviction; each
+    #: entry is a tiny dict, so the bound only matters to truly long-lived
+    #: service processes churning through many distinct query shapes.
+    _LEARNED_CAPS_CAPACITY = 1 << 16
 
     def __init__(
         self,
@@ -770,7 +855,14 @@ class DataplaneExecutor:
         slack: int = 4,
         max_retries: int = 6,
         batch_stages: bool = True,
+        compiled_cache: Optional[ExecutableCache] = None,
     ):
+        """Args: ``mesh`` — JAX device mesh (default: one axis over all
+        devices); ``slack`` — initial capacity headroom multiplier;
+        ``max_retries`` — capacity-doubling attempts before giving up;
+        ``batch_stages`` — stage-batched (True) vs per-stage scheduling;
+        ``compiled_cache`` — executable cache to use (default: the
+        process-wide :data:`EXECUTABLE_CACHE`)."""
         import jax
 
         if mesh is None:
@@ -784,6 +876,12 @@ class DataplaneExecutor:
         self.slack = slack
         self.max_retries = max_retries
         self.batch_stages = batch_stages
+        #: AOT-compiled executable cache (see :class:`ExecutableCache`); the
+        #: process-wide default is shared across executors so warm queries
+        #: recompile nothing even through a fresh executor.
+        self.compiled_cache = (
+            compiled_cache if compiled_cache is not None else EXECUTABLE_CACHE
+        )
         #: grid-route fanouts within this pow2 ratio of their group max merge
         #: into the max's executable (sentinel-padded); beyond it they keep
         #: their own pow2 fanout.
@@ -792,8 +890,12 @@ class DataplaneExecutor:
         #: (round, group, static key): a repeat run starts each work item at
         #: its last successful caps, so steady-state runs retry zero times.
         #: Purely a function of earlier runs' outcomes (identical under
-        #: batched and unbatched scheduling), hence parity-safe.
-        self._learned_caps: Dict[Tuple, Dict[str, int]] = {}
+        #: batched and unbatched scheduling), hence parity-safe.  Executor-
+        #: lifetime state with an LRU bound (`_LEARNED_CAPS_CAPACITY`) so a
+        #: service executor serving many shapes cannot grow without bound.
+        from collections import OrderedDict
+
+        self._learned_caps: "OrderedDict" = OrderedDict()
 
     # -- capacity guesses (pow2-bucketed so retries and repeat runs hit the
     # -- jit cache; all of them are starting points for the doubling retry) ---
@@ -932,6 +1034,7 @@ class DataplaneExecutor:
         for it in items:
             learned = self._learned_caps.get((round_name, it.group, it.key))
             if learned:
+                self._learned_caps.move_to_end((round_name, it.group, it.key))
                 for ch in it.caps:
                     it.caps[ch] = max(it.caps[ch], learned[ch])
         # Cap harmonization: items sharing a static key start from the group
@@ -959,11 +1062,8 @@ class DataplaneExecutor:
             bucket_list = list(buckets.values())
             prepared = []
             to_compile: Dict[Tuple, Tuple] = {}
-            if DataplaneExecutor._compiled is None:
-                from collections import OrderedDict
-
-                DataplaneExecutor._compiled = OrderedDict()
-            cache = DataplaneExecutor._compiled
+            cache = self.compiled_cache
+            executables: Dict[Tuple, object] = {}
             for bucket in bucket_list:
                 sig = (
                     self.mesh,
@@ -973,10 +1073,12 @@ class DataplaneExecutor:
                     tuple(sorted(bucket[0].caps.items())),
                     self._pow2_stages(len(bucket)),
                 )
-                if sig in cache:
-                    cache.move_to_end(sig)
                 fn, args, post = dispatch(bucket)
-                if sig in cache or sig in to_compile:
+                if sig not in executables and sig not in to_compile:
+                    exe = cache.get(sig)
+                    if exe is not None:
+                        executables[sig] = exe
+                if sig in executables or sig in to_compile:
                     self._jit_hits += 1
                 else:
                     to_compile[sig] = (fn, args)
@@ -1005,16 +1107,16 @@ class DataplaneExecutor:
                     workers = min(len(todo), max(2, os.cpu_count() or 2))
                     with ThreadPoolExecutor(max_workers=workers) as pool:
                         for sig, comp in pool.map(compile_one, todo):
-                            cache[sig] = comp
+                            cache.put(sig, comp)
+                            executables[sig] = comp
                 else:
                     sig, comp = compile_one(todo[0])
-                    cache[sig] = comp
-                while len(cache) > self._COMPILED_CAPACITY:
-                    cache.popitem(last=False)
+                    cache.put(sig, comp)
+                    executables[sig] = comp
 
             launched = []
             for bucket, sig, args, post in prepared:
-                launched.append((bucket, *post(cache[sig](*args))))
+                launched.append((bucket, *post(executables[sig](*args))))
 
             # one deferred readback per (op, bucket): the scheduler's only
             # host sync — every bucket's collectives are already in flight.
@@ -1068,6 +1170,9 @@ class DataplaneExecutor:
             pending = retry
         for it in items:
             self._learned_caps[(round_name, it.group, it.key)] = dict(it.caps)
+            self._learned_caps.move_to_end((round_name, it.group, it.key))
+        while len(self._learned_caps) > self._LEARNED_CAPS_CAPACITY:
+            self._learned_caps.popitem(last=False)
         return items
 
     # -- per-op lowering rules (each batches every live stage of the op) ------

@@ -243,8 +243,21 @@ class ProgramStage:
 class RoundProgram:
     """A compiled Theorem 6.2 instance: stages + op sequence + emit tuples.
 
-    ``emit`` holds the H = attset(Q) results (η itself is the result tuple;
-    zero communication): (machine, row over ``out_cols``) pairs.
+    Attributes:
+        query: the query this program is currently bound to (swap the data
+            with :meth:`rebind` — compilation never read it).
+        p / lam / rho_val: machine count, heavy parameter, edge-cover number.
+        stats: the histogram the plan was compiled against.
+        stages: one :class:`ProgramStage` per surviving (H, η) configuration.
+        emit: the H = attset(Q) results (η itself is the result tuple; zero
+            communication) as (machine, row over ``out_cols``) pairs;
+            ``emit_counts`` their per-H totals.
+        ops: the fixed :class:`RoundOp` sequence every backend interprets;
+            ``fused`` records whether ``fuse_semijoin_pass`` rewrote it.
+
+    Programs are immutable execution artifacts: compile once, execute on any
+    backend any number of times (executors copy per-run state out of the
+    stages), cache across queries under :func:`plan_cache_key`.
     """
 
     query: JoinQuery
@@ -285,6 +298,18 @@ class RoundProgram:
             sig = st.signature
             out[sig] = out.get(sig, 0) + 1
         return out
+
+    def rebind(self, query: JoinQuery) -> "RoundProgram":
+        """Return a copy of this compiled program bound to ``query``'s data.
+
+        Sound exactly when ``plan_cache_key(query, self.stats, self.p, ...)``
+        equals the key this program was compiled under: compilation is a pure
+        function of (query structure, histogram, p) — see
+        :func:`plan_cache_key` — so the stages, emits, and op list can be
+        shared verbatim and only the relation data behind the plan changes.
+        The cross-query plan cache of :class:`repro.mpc.service.JoinSession`
+        is built on this."""
+        return replace(self, query=query)
 
     def query_plan(self) -> QueryPlan:
         """Group the stages back into the planner's per-H view."""
@@ -366,6 +391,79 @@ def compile_plan(
     if fuse_semijoin:
         program = fuse_semijoin_pass(program)
     return program
+
+
+# ---------------------------------------------------------------------------
+# Canonical plan keys (cross-query plan/compile reuse)
+# ---------------------------------------------------------------------------
+
+
+def histogram_signature(stats: HeavyStats) -> Tuple:
+    """Hashable canonical form of a histogram — the data-side half of a plan
+    cache key.
+
+    Two instances with equal signatures have *identical* extended histograms
+    (λ, m, heavy-value sets, and every cond/pair/light_cnt record), which is
+    everything :func:`compile_plan` reads from the data.  Equal signature +
+    equal query structure therefore implies an identical compiled program —
+    the invariant the service-layer plan cache relies on (docs/design/
+    09-service.md)."""
+    return (
+        stats.lam,
+        stats.m,
+        tuple(sorted((a, tuple(v.tolist())) for a, v in stats.heavy.items())),
+        tuple(
+            sorted(
+                (tuple(sorted(e)), a, x, c) for (e, a, x), c in stats.cond.items()
+            )
+        ),
+        tuple(
+            sorted(
+                (tuple(sorted(e)), x, y, c) for (e, x, y), c in stats.pair.items()
+            )
+        ),
+        tuple(sorted((tuple(sorted(e)), c) for e, c in stats.light_cnt.items())),
+    )
+
+
+def plan_cache_key(
+    query: JoinQuery,
+    stats: HeavyStats,
+    p: int,
+    h_subsets: Optional[Sequence[Sequence[Attr]]] = None,
+    fuse_semijoin: bool = False,
+) -> Tuple:
+    """Canonical cache key under which :func:`compile_plan` is a pure function.
+
+    The key captures every compile-time input: the query *structure* (relation
+    schemes in relation order, plus which relations alias one physical
+    ``Relation.table`` — the shared-input Scatter classes), the machine count,
+    the taxonomy restriction, the fusion flag, and the full
+    :func:`histogram_signature`.  Concrete tuples are deliberately absent:
+    two instances with equal keys compile to the same program, so a cached
+    program may be :meth:`RoundProgram.rebind`-ed onto fresh data.  A shifted
+    histogram (new heavy values, changed counts) changes the signature and
+    therefore simply *misses* — stale plans age out of the service LRU rather
+    than being invalidated in place."""
+    alias: Dict[str, int] = {}
+    struct = []
+    for rel in query.relations:
+        tid = None
+        if rel.table is not None:
+            tid = alias.setdefault(rel.table, len(alias))
+        struct.append((rel.scheme, tid))
+    hs = (
+        None
+        if h_subsets is None
+        else tuple(tuple(sorted(h)) for h in h_subsets)
+    )
+    return (
+        tuple(struct),
+        p,
+        hs,
+        bool(fuse_semijoin),
+        histogram_signature(stats),
+    )
 
 
 def fuse_semijoin_pass(program: RoundProgram) -> RoundProgram:

@@ -1,0 +1,28 @@
+"""Docs integrity: intra-repo markdown links must resolve (tools/check_docs.py).
+
+The CI docs job runs the same checker plus headless example smoke runs; this
+tier-1 wrapper makes a moved/renamed doc page fail locally too.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_markdown_links_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "tools" / "check_docs.py"), str(REPO_ROOT)],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_design_index_covers_every_design_page():
+    """Every page under docs/design/ must be reachable from the DESIGN.md
+    index (a new section added without indexing it is invisible)."""
+    index = (REPO_ROOT / "docs" / "DESIGN.md").read_text()
+    for page in sorted((REPO_ROOT / "docs" / "design").glob("*.md")):
+        assert f"design/{page.name}" in index, f"{page.name} missing from DESIGN.md"

@@ -173,13 +173,18 @@ def test_output_only_overflow_scales_cap_out_not_routing():
 def _bare_scheduler(batch=True):
     """A DataplaneExecutor shell with only the scheduler state — no devices
     (the fake mesh tag just keys the executable-cache signatures)."""
+    from collections import OrderedDict
+
+    from repro.mpc.executors import ExecutableCache
+
     ex = DataplaneExecutor.__new__(DataplaneExecutor)
     ex.max_retries = 4
     ex.batch_stages = batch
     ex.mesh, ex.axis_name = "fake-mesh", "join"
+    ex.compiled_cache = ExecutableCache()
     ex._retries, ex._retry_log = 0, []
     ex._dispatches, ex._jit_hits, ex._jit_misses = 0, 0, 0
-    ex._bucket_log, ex._learned_caps = {}, {}
+    ex._bucket_log, ex._learned_caps = {}, OrderedDict()
     return ex
 
 

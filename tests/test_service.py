@@ -1,0 +1,296 @@
+"""Service layer: cross-query plan/compile reuse through JoinSession.
+
+The acceptance bar of the persistent-service layer (docs/design/09-service.md):
+
+  * session and one-shot paths are row-multiset identical on both executors
+    (byte-identical on the simulator, including the metered load);
+  * a warm repeat of a cached query runs with zero jit cache misses and zero
+    overflow retries — plan LRU + learned caps + executable cache together;
+  * learned caps and executables are *executor-lifetime* state: they survive
+    a plan-LRU eviction/readmission cycle;
+  * plan reuse is sound across *different data* with an equal plan cache key
+    (the key captures everything compile_plan reads).
+"""
+
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+
+from repro.core.query import (
+    JoinQuery,
+    Relation,
+    disconnected_query,
+    random_query,
+    reference_join,
+)
+from repro.core.taxonomy import compute_stats
+from repro.mpc import (
+    DataplaneExecutor,
+    ExecutableCache,
+    JoinSession,
+    mpc_join,
+)
+from repro.mpc.program import compile_plan, histogram_signature, plan_cache_key
+
+
+def rows_key(rows):
+    return sorted(map(tuple, rows.tolist()))
+
+
+def skew_triangle():
+    return random_query(
+        np.random.default_rng(2), "clique", 3, tuples_per_rel=200, dom_size=30,
+        skew=2.0,
+    )
+
+
+def perm_query(seed: int, n: int = 60) -> JoinQuery:
+    """(A,B) ⋈ (B,C) where both relations are permutation graphs: every value
+    appears exactly once per column, so there are *no* heavy values and the
+    histogram signature depends only on (n, λ) — two different seeds produce
+    different data behind an identical plan cache key."""
+    rng = np.random.default_rng(seed)
+    ab = np.stack([np.arange(n), rng.permutation(n)], axis=1)
+    bc = np.stack([np.arange(n), rng.permutation(n)], axis=1)
+    return JoinQuery.make(
+        [Relation.make(("A", "B"), ab), Relation.make(("B", "C"), bc)]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Plan cache key
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_key_captures_structure_histogram_and_flags():
+    q = perm_query(0)
+    stats = compute_stats(q, lam=4)
+    base = plan_cache_key(q, stats, p=8)
+    assert base == plan_cache_key(q, stats, p=8)
+    assert base != plan_cache_key(q, stats, p=16)
+    assert base != plan_cache_key(q, stats, p=8, fuse_semijoin=True)
+    assert base != plan_cache_key(q, compute_stats(q, lam=8), p=8)
+    # different data, same structure + histogram ⇒ same key (the reuse case)
+    q2 = perm_query(1)
+    assert histogram_signature(compute_stats(q2, lam=4)) == histogram_signature(stats)
+    assert plan_cache_key(q2, compute_stats(q2, lam=4), p=8) == base
+
+
+def test_plan_cache_key_sees_shared_table_alias_classes():
+    data = np.stack([np.arange(40), np.arange(40) + 1], axis=1)
+    shared = JoinQuery.make(
+        [
+            Relation(scheme=("A", "B"), data=data, table="T"),
+            Relation(scheme=("B", "C"), data=data, table="T"),
+        ]
+    )
+    unshared = JoinQuery.make(
+        [
+            Relation(scheme=("A", "B"), data=data, table="T1"),
+            Relation(scheme=("B", "C"), data=data, table="T2"),
+        ]
+    )
+    stats = compute_stats(shared, lam=4)
+    assert plan_cache_key(shared, stats, 8) != plan_cache_key(unshared, stats, 8)
+
+
+# ---------------------------------------------------------------------------
+# Session ≡ one-shot parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_session_simulator_byte_identical_to_mpc_join():
+    q = skew_triangle()
+    one_shot = mpc_join(q, p=8, lam=16)
+    session = JoinSession(p=8, backend="simulator")
+    r = session.submit(q, lam=16)
+    assert r.count == one_shot.count == len(reference_join(q))
+    assert rows_key(r.rows) == rows_key(one_shot.rows)
+    assert r.per_h_counts == one_shot.per_h_counts
+    assert r.result.sim.parallel_total_load == one_shot.sim.parallel_total_load
+    # repeat submit: plan cache hit, still byte-identical
+    r2 = session.submit(q, lam=16)
+    assert r2.plan_cache_hit and r2.compile_us == 0.0
+    assert rows_key(r2.rows) == rows_key(one_shot.rows)
+    assert r2.result.sim.parallel_total_load == one_shot.sim.parallel_total_load
+
+
+def test_session_dataplane_matches_one_shot_and_oracle():
+    q = disconnected_query(90, dom_size=12, skew=1.8)
+    stats = compute_stats(q, lam=8)
+    one_shot = DataplaneExecutor().run(compile_plan(q, stats, 8))
+    session = JoinSession(p=8, backend="dataplane")
+    r = session.submit(q, lam=8)
+    assert r.count == one_shot.count == len(reference_join(q))
+    assert rows_key(r.rows) == rows_key(one_shot.rows)
+    assert r.per_h_counts == one_shot.per_h_counts
+
+
+# ---------------------------------------------------------------------------
+# Warm path: zero recompiles, zero retries (learned-caps persistence)
+# ---------------------------------------------------------------------------
+
+
+def test_warm_repeat_zero_jit_misses_zero_retries():
+    q = skew_triangle()
+    session = JoinSession(p=8, backend="dataplane")
+    cold = session.submit(q, lam=16)
+    assert not cold.plan_cache_hit
+    warm = session.submit(q, lam=16)
+    assert warm.plan_cache_hit
+    assert warm.jit_cache_misses == 0, "warm repeat must not recompile"
+    assert warm.retry_log == [] and warm.retries == 0
+    assert rows_key(warm.rows) == rows_key(cold.rows)
+    assert session.stats.plan_hits == 1 and session.stats.plan_misses == 1
+    assert session.stats.warm_us and session.stats.cold_us
+
+
+def test_learned_caps_survive_plan_lru_eviction_cycle():
+    """Plan eviction must not forget the executor: learned caps and compiled
+    executables are keyed independently of the plan LRU, so a readmitted
+    query recompiles its *plan* (host metadata) but no executables, and
+    rediscovers no overflow."""
+    qa = skew_triangle()
+    qb = perm_query(3)          # different attrs ⇒ disjoint learned-caps keys
+    session = JoinSession(p=8, backend="dataplane", plan_cache_size=1)
+    session.submit(qa, lam=16)
+    warm = session.submit(qa, lam=16)
+    assert warm.jit_cache_misses == 0 and warm.retry_log == []
+    session.submit(qb, lam=4)   # evicts qa's plan (capacity 1)
+    assert session.stats.plan_evictions >= 1
+    readmitted = session.submit(qa, lam=16)
+    assert not readmitted.plan_cache_hit, "plan was evicted — must recompile"
+    assert readmitted.jit_cache_misses == 0, (
+        "executables are executor-lifetime state, not plan-LRU state"
+    )
+    assert readmitted.retry_log == [] and readmitted.retries == 0
+    assert rows_key(readmitted.rows) == rows_key(warm.rows)
+
+
+# ---------------------------------------------------------------------------
+# Plan reuse across different data (rebind soundness)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_reuse_across_different_data_same_key():
+    """Two permutation queries share a plan cache key but hold different
+    tuples: the second submit must reuse the compiled plan AND produce *its
+    own* join result — the rebind ships the plan, never the data."""
+    q1, q2 = perm_query(10), perm_query(11)
+    session = JoinSession(p=8, backend="dataplane")
+    r1 = session.submit(q1, lam=4)
+    r2 = session.submit(q2, lam=4)
+    assert r2.plan_cache_hit, "equal keys must share one compiled plan"
+    assert rows_key(r1.rows) == rows_key(reference_join(q1).data)
+    assert rows_key(r2.rows) == rows_key(reference_join(q2).data)
+    assert rows_key(r1.rows) != rows_key(r2.rows), "distinct data ⇒ distinct joins"
+
+
+def test_histogram_shift_changes_key_and_misses():
+    """A shifted histogram (here: a planted hub crossing the heavy threshold)
+    must not reuse the stale plan — the signature is part of the key."""
+    n = 80
+    rng = np.random.default_rng(5)
+    light = np.stack([np.arange(n), rng.permutation(n)], axis=1)
+    hubbed = light.copy()
+    hubbed[: n // 2, 0] = 7     # one value now holds n/2 tuples: heavy
+    bc = np.stack([np.arange(n), rng.permutation(n)], axis=1)
+    q_light = JoinQuery.make(
+        [Relation.make(("A", "B"), light), Relation.make(("B", "C"), bc)]
+    )
+    q_heavy = JoinQuery.make(
+        [Relation.make(("A", "B"), hubbed), Relation.make(("B", "C"), bc)]
+    )
+    session = JoinSession(p=8, backend="simulator")
+    session.submit(q_light, lam=4)
+    session.submit(q_heavy, lam=4)
+    assert session.stats.plan_misses == 2 and session.stats.plan_hits == 0
+    assert len(session.cached_plan_keys) == 2
+
+
+# ---------------------------------------------------------------------------
+# Batch submission (shared physical tables across queries)
+# ---------------------------------------------------------------------------
+
+
+def _shared_table_queries():
+    rng = np.random.default_rng(9)
+    table = np.unique(rng.integers(0, 40, size=(250, 2)), axis=0)
+    tri = JoinQuery.make(
+        [
+            Relation(scheme=("A", "B"), data=table, table="T"),
+            Relation(scheme=("B", "C"), data=table, table="T"),
+            Relation(scheme=("A", "C"), data=table, table="T"),
+        ]
+    )
+    path = JoinQuery.make(
+        [
+            Relation(scheme=("A", "B"), data=table, table="T"),
+            Relation(scheme=("B", "C"), data=table, table="T"),
+        ]
+    )
+    return tri, path
+
+
+@pytest.mark.parametrize("backend", ["simulator", "dataplane"])
+def test_submit_batch_matches_individual_submits(backend):
+    tri, path = _shared_table_queries()
+    batch_session = JoinSession(p=8, backend=backend)
+    solo_session = JoinSession(p=8, backend=backend)
+    batch = batch_session.submit_batch([tri, path], lam=6)
+    solos = [solo_session.submit(q, lam=6) for q in (tri, path)]
+    for b, s, q in zip(batch, solos, (tri, path)):
+        assert b.count == s.count == len(reference_join(q))
+        assert rows_key(b.rows) == rows_key(s.rows)
+    if backend == "simulator":
+        # shared placement is bit-identical: identical metered loads
+        for b, s in zip(batch, solos):
+            assert (
+                b.result.sim.parallel_total_load
+                == s.result.sim.parallel_total_load
+            )
+
+
+# ---------------------------------------------------------------------------
+# Session-backed subgraph enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_submit_pattern_matches_one_shot_enumeration():
+    from repro.graph import enumerate_subgraphs, triangle, zipf_graph
+
+    g = zipf_graph(np.random.default_rng(0), n_vertices=300, n_edges=900, skew=1.0)
+    one_shot = enumerate_subgraphs(g, triangle(), p=8, backend="simulator")
+    session = JoinSession(p=8, backend="simulator")
+    r1 = session.submit_pattern(triangle(), g)
+    assert np.array_equal(r1.occurrences, one_shot.occurrences)
+    r2 = session.submit_pattern(triangle(), g)
+    assert np.array_equal(r2.occurrences, one_shot.occurrences)
+    assert session.stats.plan_hits >= 1, "repeat pattern must hit the plan cache"
+
+
+# ---------------------------------------------------------------------------
+# ExecutableCache unit behavior (extraction satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_executable_cache_lru_eviction_and_stats():
+    cache = ExecutableCache(capacity=2)
+    cache.put("a", 1)
+    cache.put("b", 2)
+    assert cache.get("a") == 1          # refreshes a's slot
+    cache.put("c", 3)                   # evicts b (LRU)
+    assert len(cache) == 2 and cache.evictions == 1
+    assert cache.get("b") is None
+    assert cache.get("a") == 1 and cache.get("c") == 3
+    assert cache.hits == 3 and cache.misses == 1
+    cache.clear()
+    assert len(cache) == 0
+
+
+def test_learned_caps_store_is_bounded():
+    ex = DataplaneExecutor.__new__(DataplaneExecutor)
+    ex._learned_caps = OrderedDict()
+    cap = DataplaneExecutor._LEARNED_CAPS_CAPACITY
+    assert cap >= 1 << 12, "bound must be generous enough for real programs"

@@ -1,0 +1,71 @@
+"""Docs link checker: every intra-repo markdown link must resolve.
+
+Scans all tracked ``*.md`` files (repo root, docs/, docs/design/, …) for
+inline markdown links ``[text](target)`` and fails if any relative target —
+file or directory — does not exist on disk. External links (http/https/
+mailto) and pure in-page anchors (``#…``) are skipped; a relative target's
+``#anchor`` suffix is stripped before resolution (we check the file exists,
+not the heading). This is the CI ``docs`` job's first step, so a doc page
+moved or renamed without updating its references fails the build instead of
+rotting silently.
+
+    python tools/check_docs.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules", ".claude"}
+
+
+def iter_markdown_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if any(part in SKIP_DIRS for part in path.parts):
+            continue
+        yield path
+
+
+def check_file(path: Path, root: Path):
+    """Return a list of (link, reason) for every broken link in ``path``."""
+    broken = []
+    text = path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        try:
+            resolved.relative_to(root.resolve())
+        except ValueError:
+            broken.append((target, "escapes the repository"))
+            continue
+        if not resolved.exists():
+            broken.append((target, "does not exist"))
+    return broken
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(__file__).resolve().parents[1]
+    n_files = n_links_bad = 0
+    for path in iter_markdown_files(root):
+        n_files += 1
+        for target, reason in check_file(path, root):
+            n_links_bad += 1
+            print(f"BROKEN {path.relative_to(root)}: ({target}) {reason}")
+    if n_links_bad:
+        print(f"check_docs: {n_links_bad} broken link(s) across {n_files} files")
+        return 1
+    print(f"check_docs: all intra-repo links resolve ({n_files} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
