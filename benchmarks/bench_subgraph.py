@@ -68,6 +68,38 @@ def cases():
     ]
 
 
+def measure_case(g, pat, lam, p_plan=8, warm_repeats=3):
+    """Cold + warm dataplane measurements for one case.
+
+    Warm statistics come from a *warm* run's engine — historically the report
+    bound the cold run's stats and published its 3–6 compile misses as the
+    warm figure, contradicting the ExecutableCache's zero-miss steady-state
+    promise (which the warm runs do keep; `test_bench_subgraph.py` locks
+    this).  Warm wall-clock is best-of-``warm_repeats``."""
+    ex = DataplaneExecutor()
+    t0 = time.time()
+    cold = enumerate_subgraphs(
+        g, pat, p=p_plan, backend="dataplane", lam=lam, executor=ex
+    )
+    cold_us = (time.time() - t0) * 1e6
+    warm_samples = []
+    warm = None
+    for _ in range(warm_repeats):
+        t0 = time.time()
+        warm = enumerate_subgraphs(
+            g, pat, p=p_plan, backend="dataplane", lam=lam, executor=ex
+        )
+        warm_samples.append((time.time() - t0) * 1e6)
+    return {
+        "cold": cold,
+        "warm": warm,
+        "cold_us": cold_us,
+        "warm_us": min(warm_samples),
+        "cold_stats": cold.engine,
+        "warm_stats": warm.engine,
+    }
+
+
 def run(report):
     import jax
 
@@ -75,9 +107,15 @@ def run(report):
     n_dev = len(jax.devices())
     records = []
     for name, g, pat, lam in cases():
-        t0 = time.time()
-        brute = brute_force_occurrences(g, pat)
-        brute_us = (time.time() - t0) * 1e6
+        # brute oracle under the same best-of-repeats rule as the warm
+        # dataplane timing — timing it once handed the oracle a cold-cache
+        # figure while the engine reported its best warm sample
+        brute_samples = []
+        for _ in range(3):
+            t0 = time.time()
+            brute = brute_force_occurrences(g, pat)
+            brute_samples.append((time.time() - t0) * 1e6)
+        brute_us = min(brute_samples)
 
         t0 = time.time()
         sim = enumerate_subgraphs(g, pat, p=p_plan, backend="simulator", lam=lam)
@@ -90,27 +128,16 @@ def run(report):
             f"bound={sim.engine.bound:.0f}",
         )
 
-        ex = DataplaneExecutor()
-        t0 = time.time()
-        dp = enumerate_subgraphs(
-            g, pat, p=p_plan, backend="dataplane", lam=lam, executor=ex
-        )
-        cold_us = (time.time() - t0) * 1e6
+        m = measure_case(g, pat, lam, p_plan=p_plan)
+        dp, cold_us, warm_us = m["cold"], m["cold_us"], m["warm_us"]
         assert np.array_equal(dp.occurrences, brute), (name, dp.count, len(brute))
-        warm_samples = []
-        for _ in range(3):
-            t0 = time.time()
-            warm = enumerate_subgraphs(
-                g, pat, p=p_plan, backend="dataplane", lam=lam, executor=ex
-            )
-            warm_samples.append((time.time() - t0) * 1e6)
-        warm_us = min(warm_samples)
-        e = dp.engine
+        e, ce = m["warm_stats"], m["cold_stats"]
         report(
             f"subgraph/{name}/dataplane", warm_us,
             f"devices={n_dev} cold_us={cold_us:.0f} occ={dp.count} "
             f"retries={e.retries} dispatches={e.dispatches} "
-            f"jit_misses={e.jit_cache_misses} brute_us={brute_us:.0f}",
+            f"jit_misses={e.jit_cache_misses} cold_misses={ce.jit_cache_misses} "
+            f"brute_us={brute_us:.0f}",
         )
         records.append(
             {
@@ -129,6 +156,7 @@ def run(report):
                 "dataplane_retries": int(e.retries),
                 "dataplane_dispatches": int(e.dispatches),
                 "dataplane_jit_misses": int(e.jit_cache_misses),
+                "dataplane_cold_jit_misses": int(ce.jit_cache_misses),
             }
         )
 

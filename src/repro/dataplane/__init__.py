@@ -16,6 +16,7 @@ from .grid import (
 )
 from .join import (
     hypercube_binary_join,
+    local_join_count,
     local_join_filtered,
     local_semijoin,
     local_sorted_join,

@@ -27,7 +27,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels.ops import hash_partition, probe_use_pallas
+from ..kernels.ops import hash_partition, hash_partition_pack, probe_use_pallas
 
 
 def _partition_ids(keys: jax.Array, n_parts: int) -> jax.Array:
@@ -100,40 +100,48 @@ def unblockify(blocks, counts):
 
 
 def pack_by_partition(
-    rows: jax.Array, count: jax.Array, part: jax.Array, n_parts: int, cap_slot: int
+    rows: jax.Array, count: jax.Array, part: jax.Array, n_parts: int, cap_slot: int,
+    slot: Optional[jax.Array] = None, send_counts: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """→ (send (P, cap_slot, w), send_counts (P,), overflow scalar).
-    Rows beyond a destination's cap_slot overflow (counted, not sent)."""
+    Rows beyond a destination's cap_slot overflow (counted, not sent).
+
+    Sort-free: a row's slot is its rank among same-destination rows in input
+    order — exactly what the former stable argsort produced — computed by a
+    masked running count, so the scatter into the (P, cap_slot, w) send buffer
+    needs no reordering pass.  When the fused `hash_partition_pack` kernel
+    already produced (slot, send_counts) (the TPU path), both are accepted
+    precomputed and the one-hot pass is skipped entirely."""
     cap, w = rows.shape
-    valid = _valid_mask(cap, count)
-    part = jnp.where(valid, part, n_parts)              # invalid → ghost partition
-    order = jnp.argsort(part, stable=True)
-    rows_s = rows[order]
-    part_s = part[order]
-    # slot within destination
-    onehot = jax.nn.one_hot(part_s, n_parts + 1, dtype=jnp.int32)
-    slot = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
-    send_counts = onehot.sum(0)[:n_parts]
+    if slot is None:
+        valid = _valid_mask(cap, count)
+        part = jnp.where(valid, part, n_parts)          # invalid → ghost partition
+        onehot = jax.nn.one_hot(part, n_parts + 1, dtype=jnp.int32)
+        slot = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+        send_counts = onehot.sum(0)[:n_parts]
     overflow = jnp.maximum(send_counts - cap_slot, 0).sum()
-    keep = (part_s < n_parts) & (slot < cap_slot)
+    keep = (part < n_parts) & (slot < cap_slot)
     send = jnp.zeros((n_parts, cap_slot, w), rows.dtype)
-    send = send.at[part_s, jnp.clip(slot, 0, cap_slot - 1)].set(
-        jnp.where(keep[:, None], rows_s, 0), mode="drop"
-    )
+    # ghost/overflowing rows get an out-of-bounds destination and are dropped
+    send = send.at[part, jnp.where(keep, slot, cap_slot)].set(rows, mode="drop")
     return send, jnp.minimum(send_counts, cap_slot), overflow
 
 
 def compact(recv: jax.Array, recv_counts: jax.Array, cap_out: int):
-    """(P, cap_slot, w) + (P,) → (cap_out, w), total, overflow."""
+    """(P, cap_slot, w) + (P,) → (cap_out, w), total, overflow.
+
+    Sort-free: each valid row scatters to its rank among valid rows (stable
+    prefix-sum destination); invalid and beyond-cap rows scatter out of bounds
+    and are dropped — same output as the former stable argsort."""
     p, cap_slot, w = recv.shape
     valid = jnp.arange(cap_slot)[None, :] < recv_counts[:, None]
     flat = recv.reshape(p * cap_slot, w)
     vflat = valid.reshape(-1)
-    order = jnp.argsort(~vflat, stable=True)           # valid rows first
-    flat = flat[order]
     total = vflat.sum()
     overflow = jnp.maximum(total - cap_out, 0)
-    return flat[:cap_out], jnp.minimum(total, cap_out), overflow
+    dest = jnp.where(vflat, jnp.cumsum(vflat) - 1, cap_out)
+    out = jnp.zeros((cap_out, w), recv.dtype).at[dest].set(flat, mode="drop")
+    return out, jnp.minimum(total, cap_out), overflow
 
 
 def salt_offset(salt: int) -> int:
@@ -151,10 +159,16 @@ def exchange_by_partition(
     n_parts: int,
     cap_slot: int,
     cap_out: int,
+    slot: Optional[jax.Array] = None,
+    slot_counts: Optional[jax.Array] = None,
 ):
     """Inside shard_map: route rows to explicit destinations `part` (cap,) over
-    `axis_name`.  Returns (rows_out (cap_out, w), count_out, ovf_slot, ovf_out)."""
-    send, send_counts, ovf_slot = pack_by_partition(rows, count, part, n_parts, cap_slot)
+    `axis_name`.  Returns (rows_out (cap_out, w), count_out, ovf_slot, ovf_out).
+    ``slot``/``slot_counts`` accept the fused `hash_partition_pack` kernel's
+    precomputed send layout (see `pack_by_partition`)."""
+    send, send_counts, ovf_slot = pack_by_partition(
+        rows, count, part, n_parts, cap_slot, slot, slot_counts
+    )
     recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0, tiled=False)
     recv_counts = jax.lax.all_to_all(
         send_counts.reshape(n_parts, 1), axis_name, split_axis=0, concat_axis=0, tiled=False
@@ -171,6 +185,8 @@ def batched_exchange_by_partition(
     n_parts: int,
     cap_slot: int,
     cap_out: int,
+    slot: Optional[jax.Array] = None,
+    slot_counts: Optional[jax.Array] = None,
 ):
     """Inside shard_map: the stage-batched twin of `exchange_by_partition`.
 
@@ -182,9 +198,14 @@ def batched_exchange_by_partition(
     — per-stage overflow so the retry can re-run only the stages that
     tripped."""
     s = rows.shape[0]
-    send, send_counts, ovf_slot = jax.vmap(
-        pack_by_partition, in_axes=(0, 0, 0, None, None)
-    )(rows, counts, part, n_parts, cap_slot)
+    if slot is None:
+        send, send_counts, ovf_slot = jax.vmap(
+            pack_by_partition, in_axes=(0, 0, 0, None, None)
+        )(rows, counts, part, n_parts, cap_slot)
+    else:
+        send, send_counts, ovf_slot = jax.vmap(
+            pack_by_partition, in_axes=(0, 0, 0, None, None, 0, 0)
+        )(rows, counts, part, n_parts, cap_slot, slot, slot_counts)
     recv = jax.lax.all_to_all(
         send, axis_name, split_axis=1, concat_axis=1, tiled=False
     )
@@ -215,6 +236,16 @@ def batched_hash_exchange(
     (rows_out (s, cap_out, w), counts (s,), ovf_slot (s,), ovf_out (s,))."""
     s, cap, _ = rows.shape
     keys = rows[:, :, key_col].astype(jnp.int32) + offs[:, None].astype(jnp.int32)
+    if probe_use_pallas():
+        # fused kernel: hash + partition + slot + send counts in one pass,
+        # vmapped over the stage axis (bit-identical to the jnp path below)
+        part, slot, slot_counts = jax.vmap(
+            lambda k, c: hash_partition_pack(k, c, n_parts)
+        )(keys, counts)
+        return batched_exchange_by_partition(
+            rows, counts, part, axis_name, n_parts, cap_slot, cap_out,
+            slot, slot_counts,
+        )
     # the partition hash is per-key, so the flattened batch partitions
     # identically to s separate calls (the unbatched path's exact function).
     part = _partition_ids(keys.reshape(s * cap), n_parts)
@@ -243,5 +274,11 @@ def hash_exchange(
     else:
         off = salt.astype(jnp.int32)
     keys = rows[:, key_col].astype(jnp.int32) + off
+    if probe_use_pallas():
+        part, slot, slot_counts = hash_partition_pack(keys, count, n_parts)
+        return exchange_by_partition(
+            rows, count, part, axis_name, n_parts, cap_slot, cap_out,
+            slot, slot_counts,
+        )
     part = _partition_ids(keys, n_parts)
     return exchange_by_partition(rows, count, part, axis_name, n_parts, cap_slot, cap_out)

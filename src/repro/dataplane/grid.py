@@ -345,7 +345,7 @@ def _batched_cp_route_fn(mesh, axis_name, sig: CPBatchSig, cap_slot, cap_out):
             P(None, axis_name, None, None), P(None, axis_name), P(None, axis_name, None),
         ),
         check_rep=False,
-    ))
+    ), donate_argnums=(0,))
 
 
 @lru_cache(maxsize=512)
@@ -380,7 +380,128 @@ def _batched_hc_route_fn(mesh, axis_name, sig: HCBatchSig, cap_slot, cap_out):
             P(None, axis_name, None, None), P(None, axis_name), P(None, axis_name, None),
         ),
         check_rep=False,
+    ), donate_argnums=(0,))
+
+
+def _dest_hist(counts: jax.Array, dests: jax.Array, p: int) -> jax.Array:
+    """(s,) valid row counts + (s, cap, F) destination cells (-1 = ghost) →
+    (s, p) per-destination-device copy histogram: exactly the send-slot
+    occupancy the emit pass's `pack_by_partition` will see, so its column sums
+    across source devices are the exact receive sizes."""
+    s, cap, fanout = dests.shape
+    v = dests.reshape(s, cap * fanout)
+    valid = (
+        jnp.arange(cap * fanout, dtype=jnp.int32)[None, :]
+        < (counts * fanout)[:, None]
+    )
+    dst = jnp.where(valid & (v >= 0), v % p, p)
+    return jax.vmap(lambda d: jnp.zeros((p + 1,), jnp.int32).at[d].add(1))(dst)[:, :p]
+
+
+@lru_cache(maxsize=512)
+def _batched_cp_route_count_fn(mesh, axis_name, sig: CPBatchSig):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(rows, cnts, offs, dims, scales, table):
+        rows, cnt, off = rows[:, 0], cnts[:, 0], offs[:, 0]
+        s, cap, _ = rows.shape
+        ids = off[:, None].astype(jnp.int32) + jnp.arange(cap, dtype=jnp.int32)
+        own = (ids % dims[:, None]).astype(jnp.int32)
+        dests = own[:, :, None] * scales[:, None, None] + table[:, None, :]
+        dests = jnp.where(table[:, None, :] < 0, -1, dests)
+        return (_dest_hist(cnt, dests, p)[:, None],)
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis_name, None, None), P(None, axis_name), P(None, axis_name),
+            P(None), P(None), P(None, None),
+        ),
+        out_specs=(P(None, axis_name, None),),
+        check_rep=False,
     ))
+
+
+@lru_cache(maxsize=512)
+def _batched_hc_route_count_fn(mesh, axis_name, sig: HCBatchSig):
+    from jax.experimental.shard_map import shard_map
+
+    p = mesh.shape[axis_name]
+
+    def body(rows, cnts, salts, shares, strides, table):
+        rows, cnt = rows[:, 0], cnts[:, 0]
+        s, cap, _ = rows.shape
+        flat = jnp.zeros((s, cap), jnp.int32)
+        for f, col in enumerate(sig.cols):
+            coord = coord_hash(rows[:, :, col], salts[:, f, None]) % shares[:, f, None]
+            flat = flat + coord.astype(jnp.int32) * strides[:, f, None]
+        dests = flat[:, :, None] + table[:, None, :]
+        dests = jnp.where(table[:, None, :] < 0, -1, dests)
+        return (_dest_hist(cnt, dests, p)[:, None],)
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis_name, None, None), P(None, axis_name),
+            P(None, None), P(None, None), P(None, None), P(None, None),
+        ),
+        out_specs=(P(None, axis_name, None),),
+        check_rep=False,
+    ))
+
+
+def batched_sharded_grid_route_count(
+    mesh,
+    axis_name: str,
+    rows: jax.Array,
+    counts: jax.Array,
+    sig,
+    *,
+    offsets=None,
+    dims=None,
+    scales=None,
+    salts=None,
+    shares=None,
+    strides=None,
+    table=None,
+    invoke: bool = True,
+):
+    """Count-only twin of `batched_sharded_grid_route`: the exact per-stage
+    (p_src, p_dst) copy histograms with **no collective** — the destination
+    algebra is identical (same traced geometry operands, same salts), only the
+    exchange is replaced by a per-device histogram.  The executor's
+    count-then-emit pass sizes the emit's cap_slot (max entry) and cap_out
+    (max column sum) exactly from the result.  Returns ``(hist (s, p, p),)``;
+    with ``invoke=False`` returns ``(jitted_fn, args)``."""
+    import numpy as np
+
+    if isinstance(sig, CPBatchSig):
+        fn = _batched_cp_route_count_fn(mesh, axis_name, sig)
+        args = (
+            rows, counts,
+            np.asarray(offsets, dtype=np.int32),
+            np.asarray(dims, dtype=np.int32),
+            np.asarray(scales, dtype=np.int32),
+            np.asarray(table, dtype=np.int32),
+        )
+    elif isinstance(sig, HCBatchSig):
+        fn = _batched_hc_route_count_fn(mesh, axis_name, sig)
+        args = (
+            rows, counts,
+            np.asarray(salts, dtype=np.uint32),
+            np.asarray(shares, dtype=np.uint32),
+            np.asarray(strides, dtype=np.int32),
+            np.asarray(table, dtype=np.int32),
+        )
+    else:
+        raise TypeError(f"unknown grid-route signature {sig!r}")
+    if not invoke:
+        return fn, args
+    return fn(*args)
 
 
 def batched_sharded_grid_route(

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..kernels.ops import merge_join_counts, probe_use_pallas
+from ..kernels.ops import merge_join_counts, merge_join_pairs, probe_use_pallas
 from .exchange import batched_hash_exchange, hash_exchange, salt_offset
 
 
@@ -59,8 +59,6 @@ def local_sorted_join(
     b_keys = jnp.where(jnp.arange(capb) < b_count, b_keys, big)
     a_ord = jnp.argsort(a_keys)
     b_ord = jnp.argsort(b_keys)
-    a_sorted = a_rows[a_ord]
-    b_sorted = b_rows[b_ord]
     a_k = a_keys[a_ord]
     b_k = b_keys[b_ord]
 
@@ -68,21 +66,24 @@ def local_sorted_join(
     # sentinel keys must not match each other
     real_a = a_k < big
     counts = jnp.where(real_a, upper - lower, 0)
-    starts = jnp.cumsum(counts) - counts           # output offset per a-row
+    starts = (jnp.cumsum(counts) - counts).astype(jnp.int32)  # output offset per a-row
     total = counts.sum()
     overflow = jnp.maximum(total - cap_out, 0)
 
-    # expansion: out row t ← (a_idx(t) = searchsorted(starts, t, 'right')-1,
-    #                         b_idx(t) = lower[a_idx] + (t - starts[a_idx]))
+    # range expansion (merge_join_pairs kernel): out row t ← a_idx(t) =
+    # max{i : starts[i] <= t}, b_idx(t) = lower[a_idx] + (t - starts[a_idx])
     t = jnp.arange(cap_out)
-    a_idx = jnp.clip(jnp.searchsorted(starts, t, side="right") - 1, 0, capa - 1)
-    within = t - starts[a_idx]
-    b_idx = jnp.clip(lower[a_idx] + within, 0, capb - 1)
+    a_idx, b_idx = merge_join_pairs(
+        lower.astype(jnp.int32), starts, cap_out, use_pallas=probe_use_pallas()
+    )
+    b_idx = jnp.clip(b_idx, 0, capb - 1)
     valid = t < jnp.minimum(total, cap_out)
 
-    a_part = a_sorted[a_idx]                                        # (cap_out, wa)
+    # gather output rows through the sort permutation (composed index gathers —
+    # the full sorted row matrices are never materialized)
+    a_part = a_rows[a_ord[a_idx]]                                   # (cap_out, wa)
     b_cols = [c for c in range(wb) if c != kb]
-    b_part = b_sorted[b_idx][:, jnp.array(b_cols, jnp.int32)] if b_cols else jnp.zeros(
+    b_part = b_rows[b_ord[b_idx]][:, jnp.array(b_cols, jnp.int32)] if b_cols else jnp.zeros(
         (cap_out, 0), b_rows.dtype
     )
     out = jnp.concatenate([a_part, b_part], axis=1)
@@ -91,15 +92,16 @@ def local_sorted_join(
 
 
 def _compact_prefix(rows: jax.Array, keep: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Stable-compact kept rows to a zero-padded valid prefix. rows (cap, ...)."""
-    order = jnp.argsort(~keep, stable=True)
+    """Stable-compact kept rows to a zero-padded valid prefix. rows (cap, ...).
+
+    Sort-free: the destination of a kept row is its rank among kept rows
+    (exclusive prefix sum); dropped rows scatter out of bounds and vanish
+    (`mode="drop"`), leaving zeros — identical output to the former stable
+    argsort at O(n) instead of O(n log n)."""
+    cap = rows.shape[0]
     cnt = keep.sum()
-    out = rows[order]
-    mask = jnp.arange(rows.shape[0]) < cnt
-    if out.ndim == 2:
-        out = jnp.where(mask[:, None], out, 0)
-    else:
-        out = jnp.where(mask, out, 0)
+    dest = jnp.where(keep, jnp.cumsum(keep) - 1, cap)
+    out = jnp.zeros_like(rows).at[dest].set(rows, mode="drop")
     return out, cnt
 
 
@@ -158,35 +160,95 @@ def _composite_rank_keys(
     return ranks[:na], ranks[na:]
 
 
+def _packed_keys(rows: jax.Array, cols: Sequence[int], mults: jax.Array) -> jax.Array:
+    """Mixed-radix int32 packing of the key tuple rows[:, cols]:
+    key = ((c0·m0 + c1)·m1 + c2)···.  ``mults`` is a traced (len(cols)-1,)
+    vector of per-position radices (strict bounds on the column values, shared
+    by both join sides).  Collision-free iff every value is in [0, m_i) and the
+    product of radices (times max c0 + 1) stays below 2^31 — the host-side
+    eligibility check the executor performs before choosing this path."""
+    k = rows[:, cols[0]].astype(jnp.int32)
+    for i, c in enumerate(cols[1:]):
+        k = k * mults[i] + rows[:, c].astype(jnp.int32)
+    return k
+
+
+def local_join_count(
+    a_rows: jax.Array, a_count: jax.Array,
+    b_rows: jax.Array, b_count: jax.Array,
+    ka: int, kb: int,
+    dup_pairs: Tuple[Tuple[int, int], ...] = (),
+    key_mults: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Exact device-local match count for `local_join_filtered` — no expansion,
+    no row gathers (keys only, `jnp.sort` instead of argsort).  The executor's
+    count-then-emit pass runs this to size the emit's cap_out exactly."""
+    capa, _ = a_rows.shape
+    capb, _ = b_rows.shape
+    big = jnp.iinfo(jnp.int32).max
+    a_valid = jnp.arange(capa) < a_count
+    b_valid = jnp.arange(capb) < b_count
+    if not dup_pairs:
+        a_keys, b_keys = a_rows[:, ka], b_rows[:, kb]
+    elif key_mults is not None:
+        a_keys = _packed_keys(a_rows, [ka] + [ca for ca, _ in dup_pairs], key_mults)
+        b_keys = _packed_keys(b_rows, [kb] + [cb for _, cb in dup_pairs], key_mults)
+    else:
+        a_keys, b_keys = _composite_rank_keys(
+            [a_rows[:, ka]] + [a_rows[:, ca] for ca, _ in dup_pairs], a_valid,
+            [b_rows[:, kb]] + [b_rows[:, cb] for _, cb in dup_pairs], b_valid,
+        )
+    a_k = jnp.sort(jnp.where(a_valid, a_keys, big))
+    b_k = jnp.sort(jnp.where(b_valid, b_keys, big))
+    lower, upper = merge_join_counts(a_k, b_k, use_pallas=probe_use_pallas())
+    return jnp.where(a_k < big, upper - lower, 0).sum().astype(jnp.int32)
+
+
 def local_join_filtered(
     a_rows: jax.Array, a_count: jax.Array,
     b_rows: jax.Array, b_count: jax.Array,
     ka: int, kb: int, cap_out: int,
     dup_pairs: Tuple[Tuple[int, int], ...] = (),
+    key_mults: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """`local_sorted_join` with duplicated attributes folded into the key.
 
     ``dup_pairs`` lists (a_col, b_col) pairs (b_col ≠ kb) of attributes shared
     beyond the join key — the cyclic-subquery case.  The full key tuple
-    (key, dup_1, dup_2, ...) is ranked densely via ``_composite_rank_keys``
-    and the join runs on the ranks, so ``cap_out`` (and the output-overflow
-    channel) meters only TRUE matches.  The previous implementation
-    materialized the key-only join and equality-filtered afterwards, which
-    made the capacity requirement the per-cell *cartesian* size — on
-    self-join-shaped queries (every LocalJoin chain level of a clique
-    pattern) that overflowed every reasonable output cap.  The duplicate
-    B-side columns are equal by construction and dropped; output scheme is
-    A's columns then B's columns minus kb and minus the dup b_cols."""
+    (key, dup_1, dup_2, ...) is folded to one int32 key and the join runs on
+    the folded keys, so ``cap_out`` (and the output-overflow channel) meters
+    only TRUE matches.  Two folding strategies:
+
+    * ``key_mults`` given — mixed-radix *packing* (`_packed_keys`): one
+      multiply-add per extra column, no sorting.  Only valid when the caller
+      has checked the key space fits int32 (the executor's key-compression
+      eligibility check); radices are traced so one executable serves every
+      bucket that passes the check.
+    * otherwise — dense lexicographic *ranking* (`_composite_rank_keys`), the
+      checked fallback: always fits int32 (ranks < capA + capB) at the price
+      of a lexsort over both sides.
+
+    The previous implementation materialized the key-only join and
+    equality-filtered afterwards, which made the capacity requirement the
+    per-cell *cartesian* size — on self-join-shaped queries (every LocalJoin
+    chain level of a clique pattern) that overflowed every reasonable output
+    cap.  The duplicate B-side columns are equal by construction and dropped;
+    output scheme is A's columns then B's columns minus kb and minus the dup
+    b_cols."""
     if not dup_pairs:
         return local_sorted_join(a_rows, a_count, b_rows, b_count, ka, kb, cap_out)
     capa, wa = a_rows.shape
     capb, wb = b_rows.shape
     a_valid = jnp.arange(capa) < a_count
     b_valid = jnp.arange(capb) < b_count
-    a_keys, b_keys = _composite_rank_keys(
-        [a_rows[:, ka]] + [a_rows[:, ca] for ca, _ in dup_pairs], a_valid,
-        [b_rows[:, kb]] + [b_rows[:, cb] for _, cb in dup_pairs], b_valid,
-    )
+    if key_mults is not None:
+        a_keys = _packed_keys(a_rows, [ka] + [ca for ca, _ in dup_pairs], key_mults)
+        b_keys = _packed_keys(b_rows, [kb] + [cb for _, cb in dup_pairs], key_mults)
+    else:
+        a_keys, b_keys = _composite_rank_keys(
+            [a_rows[:, ka]] + [a_rows[:, ca] for ca, _ in dup_pairs], a_valid,
+            [b_rows[:, kb]] + [b_rows[:, cb] for _, cb in dup_pairs], b_valid,
+        )
     out, cnt, ovf = local_sorted_join(
         a_rows, a_count, b_rows, b_count, ka, kb, cap_out,
         a_keys=a_keys, b_keys=b_keys,
@@ -535,33 +597,38 @@ def batched_sharded_semijoin(
 
 
 @lru_cache(maxsize=512)
-def _batched_colocated_join_fn(mesh, axis_name, ka, kb, cap_out, dup_pairs):
+def _batched_colocated_join_fn(mesh, axis_name, ka, kb, cap_out, dup_pairs, packed):
     from jax.experimental.shard_map import shard_map
 
-    def body(a_rows, a_cnt, b_rows, b_cnt):
+    def body(a_rows, a_cnt, b_rows, b_cnt, mults):
+        # mults (s, ndup) replicated; packed is static, so the unpacked variant
+        # traces no use of it (it rides along as a zero-size dummy)
         out, cnt, ovf = jax.vmap(
-            partial(
-                local_join_filtered, ka=ka, kb=kb, cap_out=cap_out,
-                dup_pairs=dup_pairs,
+            lambda ar, ac, br, bc, m: local_join_filtered(
+                ar, ac, br, bc, ka=ka, kb=kb, cap_out=cap_out,
+                dup_pairs=dup_pairs, key_mults=m if packed else None,
             )
-        )(a_rows[:, 0], a_cnt[:, 0], b_rows[:, 0], b_cnt[:, 0])
+        )(a_rows[:, 0], a_cnt[:, 0], b_rows[:, 0], b_cnt[:, 0], mults)
         ovf2 = jnp.stack(
             [jnp.zeros_like(ovf, jnp.int32), ovf.astype(jnp.int32)], axis=-1
         )
         return out[:, None], cnt[:, None], ovf2[:, None, :]
 
+    # the stacked input blocks are rebuilt host-side per dispatch, so their
+    # device copies are single-use: donating them lets XLA reuse the pages
+    # for the (equally large) expansion buffers
     return jax.jit(shard_map(
         body,
         mesh=mesh,
         in_specs=(
             P(None, axis_name, None, None), P(None, axis_name),
-            P(None, axis_name, None, None), P(None, axis_name),
+            P(None, axis_name, None, None), P(None, axis_name), P(None, None),
         ),
         out_specs=(
             P(None, axis_name, None, None), P(None, axis_name), P(None, axis_name, None),
         ),
         check_rep=False,
-    ))
+    ), donate_argnums=(0, 2))
 
 
 def batched_sharded_colocated_join(
@@ -572,17 +639,74 @@ def batched_sharded_colocated_join(
     ka: int, kb: int,
     cap_out: int,
     dup_pairs: Tuple[Tuple[int, int], ...] = (),
+    key_mults: Optional[jax.Array] = None,      # (s, ndup) int32 packing radices
     invoke: bool = True,
 ):
     """Stage-batched `sharded_colocated_join`: s communication-free per-cell
     joins in one dispatch (vmapped `local_join_filtered`; the slot channel is
-    structurally zero).  Returns (out (s, p, cap_out, w), counts (s, p),
-    ovf (s, p, 2)); with ``invoke=False`` returns ``(jitted_fn, args)`` for
-    AOT compilation."""
-    fn = _batched_colocated_join_fn(mesh, axis_name, ka, kb, cap_out, tuple(dup_pairs))
+    structurally zero).  ``key_mults`` selects the packed int32 composite-key
+    path (see `local_join_filtered`); radices are traced, so packed buckets of
+    one shape share an executable.  Returns (out (s, p, cap_out, w),
+    counts (s, p), ovf (s, p, 2)); with ``invoke=False`` returns
+    ``(jitted_fn, args)`` for AOT compilation."""
+    packed = key_mults is not None
+    if key_mults is None:
+        key_mults = jnp.zeros((a_global.shape[0], max(1, len(dup_pairs))), jnp.int32)
+    fn = _batched_colocated_join_fn(
+        mesh, axis_name, ka, kb, cap_out, tuple(dup_pairs), packed
+    )
     if not invoke:
-        return fn, (a_global, a_counts, b_global, b_counts)
-    return fn(a_global, a_counts, b_global, b_counts)
+        return fn, (a_global, a_counts, b_global, b_counts, key_mults)
+    return fn(a_global, a_counts, b_global, b_counts, key_mults)
+
+
+@lru_cache(maxsize=512)
+def _batched_colocated_count_fn(mesh, axis_name, ka, kb, dup_pairs, packed):
+    from jax.experimental.shard_map import shard_map
+
+    def body(a_rows, a_cnt, b_rows, b_cnt, mults):
+        cnt = jax.vmap(
+            lambda ar, ac, br, bc, m: local_join_count(
+                ar, ac, br, bc, ka=ka, kb=kb,
+                dup_pairs=dup_pairs, key_mults=m if packed else None,
+            )
+        )(a_rows[:, 0], a_cnt[:, 0], b_rows[:, 0], b_cnt[:, 0], mults)
+        s = cnt.shape[0]
+        return cnt[:, None], jnp.zeros((s, 1, 2), jnp.int32)
+
+    return jax.jit(shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis_name, None, None), P(None, axis_name),
+            P(None, axis_name, None, None), P(None, axis_name), P(None, None),
+        ),
+        out_specs=(P(None, axis_name), P(None, axis_name, None)),
+        check_rep=False,
+    ))
+
+
+def batched_sharded_colocated_join_count(
+    mesh,
+    axis_name: str,
+    a_global: jax.Array, a_counts: jax.Array,   # (s, p, capA, wa), (s, p)
+    b_global: jax.Array, b_counts: jax.Array,
+    ka: int, kb: int,
+    dup_pairs: Tuple[Tuple[int, int], ...] = (),
+    key_mults: Optional[jax.Array] = None,
+    invoke: bool = True,
+):
+    """Count-only twin of `batched_sharded_colocated_join`: the exact per-device
+    match totals (s, p) with no expansion, so the executor can size the emit
+    pass's cap_out exactly (count-then-emit).  Returns (counts (s, p),
+    ovf (s, p, 2) structurally zero); ``invoke=False`` → ``(jitted_fn, args)``."""
+    packed = key_mults is not None
+    if key_mults is None:
+        key_mults = jnp.zeros((a_global.shape[0], max(1, len(dup_pairs))), jnp.int32)
+    fn = _batched_colocated_count_fn(mesh, axis_name, ka, kb, tuple(dup_pairs), packed)
+    if not invoke:
+        return fn, (a_global, a_counts, b_global, b_counts, key_mults)
+    return fn(a_global, a_counts, b_global, b_counts, key_mults)
 
 
 def hypercube_binary_join(

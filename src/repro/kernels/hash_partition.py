@@ -30,6 +30,73 @@ def _kernel(keys_ref, part_ref, hist_ref, *, n_parts: int):
     hist_ref[...] = onehot.sum(axis=0)[None, :]
 
 
+def _pack_kernel(count_ref, keys_ref, part_ref, slot_ref, hist_ref, base_ref, *, n_parts: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        base_ref[...] = jnp.zeros_like(base_ref)
+
+    k = keys_ref[...].astype(jnp.uint32)
+    h = (k ^ (k >> 16)) * jnp.uint32(MIX_A)
+    h = (h ^ (h >> 13)) * jnp.uint32(MIX_B)
+    h = h ^ (h >> 16)
+    part = (h % jnp.uint32(n_parts)).astype(jnp.int32)
+    # rows past the valid count go to a ghost partition (id == n_parts) so they
+    # neither claim slots nor show up in the send histogram
+    idx = i * BLOCK + jax.lax.broadcasted_iota(jnp.int32, (BLOCK, 1), 0)[:, 0]
+    part = jnp.where(idx < count_ref[0], part, jnp.int32(n_parts))
+    part_ref[...] = part
+    iota = jax.lax.broadcasted_iota(jnp.int32, (BLOCK, n_parts + 1), 1)
+    onehot = (part[:, None] == iota).astype(jnp.int32)
+    # slot = running base from earlier tiles + exclusive rank within this tile
+    within = ((jnp.cumsum(onehot, axis=0) - onehot) * onehot).sum(axis=1)
+    base = base_ref[...]                                  # (1, n_parts + 1)
+    slot_ref[...] = within + (onehot * base).sum(axis=1)
+    tile_hist = onehot.sum(axis=0)
+    hist_ref[...] = tile_hist[None, :n_parts]
+    base_ref[...] = base + tile_hist[None, :]
+
+
+def hash_partition_pack_pallas(
+    keys: jax.Array, count: jax.Array, n_parts: int, interpret: bool = True
+):
+    """Fused exchange send side: hash + partition id + in-partition slot + histogram
+    in one pass. keys (N,) int32, N % BLOCK == 0; count (1,) int32 valid prefix
+    length. → (part (N,) with n_parts marking invalid rows, slot (N,) stable rank
+    within the row's partition, hist (N/BLOCK, P) per-tile send counts). The grid
+    is sequential, carrying the running per-partition base in a revisited (1, P+1)
+    output block so `slot` is globally correct without a second pass."""
+    n = keys.shape[0]
+    assert n % BLOCK == 0, n
+    n_tiles = n // BLOCK
+    kernel = lambda cr, kr, pr, sr, hr, br: _pack_kernel(
+        cr, kr, pr, sr, hr, br, n_parts=n_parts
+    )
+    part, slot, hist, _base = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1, n_parts), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_parts + 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, n_parts), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_parts + 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(count, keys)
+    return part, slot, hist
+
+
 def hash_partition_pallas(
     keys: jax.Array, n_parts: int, interpret: bool = True
 ):

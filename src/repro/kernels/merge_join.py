@@ -25,6 +25,7 @@ from jax.experimental import pallas as pl
 
 BLOCK_A = 256
 BLOCK_B = 1024
+BLOCK_T = 256
 
 
 def _kernel(a_ref, b_ref, lower_ref, upper_ref):
@@ -41,6 +42,71 @@ def _kernel(a_ref, b_ref, lower_ref, upper_ref):
     le = (b[None, :] <= a[:, None]).astype(jnp.int32)
     lower_ref[...] += lt.sum(axis=1)
     upper_ref[...] += le.sum(axis=1)
+
+
+def _pairs_kernel(starts_ref, dl_ref, ds_ref, a_ref, b_ref, st_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    i = pl.program_id(0)
+    t = i * BLOCK_T + jax.lax.broadcasted_iota(jnp.int32, (BLOCK_T, 1), 0)[:, 0]
+    s = starts_ref[...]     # (BLOCK_A,) sorted ascending, sentinel-padded
+    hit = s[None, :] <= t[:, None]
+    # telescoping compare-reduce: with K(t) = max{j : starts[j] <= t},
+    #   Σ_j hit          = K + 1          (starts is nondecreasing)
+    #   Σ_j Δlower · hit = lower[K]       (Δ telescopes regardless of sign)
+    #   Σ_j Δstarts· hit = starts[K]
+    a_ref[...] += hit.astype(jnp.int32).sum(axis=1)
+    b_ref[...] += jnp.where(hit, dl_ref[...][None, :], 0).sum(axis=1)
+    st_ref[...] += jnp.where(hit, ds_ref[...][None, :], 0).sum(axis=1)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finish():
+        a_ref[...] = a_ref[...] - 1                     # a_idx = K
+        b_ref[...] = b_ref[...] + (t - st_ref[...])     # b_idx = lower[K] + (t - starts[K])
+
+
+def merge_join_pairs_pallas(
+    starts: jax.Array, dlower: jax.Array, dstarts: jax.Array,
+    cap_out: int, interpret: bool = True,
+):
+    """Expand per-key match ranges into the flat (a_idx, b_idx) pair list.
+
+    starts (N,) int32: exclusive prefix sum of per-key match counts (starts[0] must
+    be 0; pad with +2^31-1 sentinels). dlower/dstarts (N,): first differences of the
+    per-key `lower` bound and of `starts` (pad with 0). For output slot t in
+    [0, cap_out): a_idx[t] = max{i : starts[i] <= t}, b_idx[t] = lower[a_idx] +
+    (t - starts[a_idx]). Returns (a_idx, b_idx, starts_at) int32 (cap_out,);
+    starts_at is a scratch output (starts[a_idx] accumulator) callers discard.
+    """
+    n, t_cap = starts.shape[0], cap_out
+    assert n % BLOCK_A == 0 and t_cap % BLOCK_T == 0, (n, t_cap)
+    grid = (t_cap // BLOCK_T, n // BLOCK_A)
+    return pl.pallas_call(
+        _pairs_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_A,), lambda i, j: (j,)),
+            pl.BlockSpec((BLOCK_A,), lambda i, j: (j,)),
+            pl.BlockSpec((BLOCK_A,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_T,), lambda i, j: (i,)),
+            pl.BlockSpec((BLOCK_T,), lambda i, j: (i,)),
+            pl.BlockSpec((BLOCK_T,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_cap,), jnp.int32),
+            jax.ShapeDtypeStruct((t_cap,), jnp.int32),
+            jax.ShapeDtypeStruct((t_cap,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(starts, dlower, dstarts)
 
 
 def merge_join_counts_pallas(

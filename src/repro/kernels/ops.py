@@ -7,6 +7,7 @@ on TPU backends `_INTERPRET` flips to False and the same code compiles to Mosaic
 
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -29,7 +30,14 @@ def probe_use_pallas() -> bool:
     jnp reference (asserted in tests/test_kernels.py) but traces to a much
     larger graph: the reference path compiles ~2× faster and runs ~3× faster
     on CPU, which matters when an executor fuses hundreds of stages into a
-    handful of executables."""
+    handful of executables.
+
+    `REPRO_USE_PALLAS=1` (or `0`) overrides the probe either way — the switch
+    the kernel benchmarks and parity tests use to force the Pallas path under
+    the interpreter."""
+    force = os.environ.get("REPRO_USE_PALLAS")
+    if force is not None and force != "":
+        return force not in ("0", "false", "no")
     return not _INTERPRET
 
 
@@ -73,6 +81,57 @@ def merge_join_counts(a_keys: jax.Array, b_keys: jax.Array, use_pallas: bool = T
     # padded B sentinels never compare < or <= real keys except vs the padded A
     # sentinels; trim A and clamp to the true M.
     return jnp.minimum(lower[:n], m), jnp.minimum(upper[:n], m)
+
+
+@partial(jax.jit, static_argnames=("cap_out", "use_pallas"))
+def merge_join_pairs(lower: jax.Array, starts: jax.Array, cap_out: int,
+                     use_pallas: bool = True):
+    """Expand sorted-merge match ranges to the flat (a_idx, b_idx) pair list.
+
+    lower (N,) int32: per-A-key lower bound in sorted B; starts (N,) int32:
+    exclusive prefix sum of per-key match counts (starts[0] == 0 — guaranteed
+    when starts = cumsum(counts) - counts). Output slot t in [0, cap_out) maps
+    to the key a_idx[t] = max{i : starts[i] <= t} and b_idx[t] = lower[a_idx] +
+    (t - starts[a_idx]); slots at or past the true total alias the last key, so
+    callers must mask by the total count. a_idx is clipped to [0, N-1]; b_idx
+    is returned unclipped."""
+    n = starts.shape[0]
+    if n == 0:
+        z = jnp.zeros((cap_out,), jnp.int32)
+        return z, z
+    if not use_pallas:
+        return _ref.merge_join_pairs_ref(lower, starts, cap_out)
+    big = jnp.iinfo(jnp.int32).max
+    dl = jnp.diff(lower.astype(jnp.int32), prepend=jnp.int32(0))
+    ds = jnp.diff(starts.astype(jnp.int32), prepend=jnp.int32(0))
+    starts_p = _pad_to(starts.astype(jnp.int32), _mj.BLOCK_A, big)
+    dl_p = _pad_to(dl, _mj.BLOCK_A, 0)
+    ds_p = _pad_to(ds, _mj.BLOCK_A, 0)
+    cap_p = -(-cap_out // _mj.BLOCK_T) * _mj.BLOCK_T
+    a_idx, b_idx, _ = _mj.merge_join_pairs_pallas(
+        starts_p, dl_p, ds_p, cap_p, interpret=_INTERPRET
+    )
+    return jnp.clip(a_idx[:cap_out], 0, n - 1), b_idx[:cap_out]
+
+
+@partial(jax.jit, static_argnames=("n_parts", "use_pallas"))
+def hash_partition_pack(keys: jax.Array, count: jax.Array, n_parts: int,
+                        use_pallas: bool = True):
+    """Fused exchange send side: → (part (N,) int32 with n_parts marking rows at or
+    past `count`, slot (N,) stable in-partition rank, send_counts (n_parts,))."""
+    n = keys.shape[0]
+    if keys.dtype in (jnp.int64, jnp.uint64):
+        keys = fold64(keys)
+    count = jnp.asarray(count, jnp.int32).reshape((1,))
+    if not use_pallas:
+        part, slot, hist = _ref.hash_partition_pack_ref(keys, count[0], n_parts, tile=n)
+        return part, slot, hist.sum(axis=0)
+    keys_p = _pad_to(keys, _hp.BLOCK, 0)
+    # padding rows sit past `count` (count <= n), so the kernel ghosts them
+    part, slot, hist = _hp.hash_partition_pack_pallas(
+        keys_p, count, n_parts, interpret=_INTERPRET
+    )
+    return part[:n], slot[:n], hist.sum(axis=0)
 
 
 @partial(jax.jit, static_argnames=("n_parts", "use_pallas"))

@@ -17,6 +17,20 @@ def merge_join_counts_ref(a_keys: jax.Array, b_keys: jax.Array):
     return lower, upper
 
 
+def merge_join_pairs_ref(lower: jax.Array, starts: jax.Array, cap_out: int):
+    """Expand match ranges into the flat pair list: starts (N,) is the exclusive
+    prefix sum of per-key match counts (starts[0] == 0), lower (N,) the per-key
+    lower bound in B. → (a_idx, b_idx) int32 (cap_out,); slots past the true
+    total alias the last key (callers mask by the total)."""
+    n = starts.shape[0]
+    t = jnp.arange(cap_out, dtype=jnp.int32)
+    a_idx = jnp.clip(
+        jnp.searchsorted(starts, t, side="right").astype(jnp.int32) - 1, 0, n - 1
+    )
+    b_idx = lower[a_idx].astype(jnp.int32) + (t - starts[a_idx].astype(jnp.int32))
+    return a_idx, b_idx
+
+
 def hash_u32_ref(keys: jax.Array) -> jax.Array:
     """Multiplicative mix on uint32 lanes (int64 keys are pre-folded in ops.py)."""
     k = keys.astype(jnp.uint32)
@@ -34,6 +48,19 @@ def hash_partition_ref(keys: jax.Array, n_parts: int, tile: int):
     onehot = jax.nn.one_hot(part.reshape(n_tiles, tile), n_parts, dtype=jnp.int32)
     hist = onehot.sum(axis=1)
     return part, hist
+
+
+def hash_partition_pack_ref(keys: jax.Array, count: jax.Array, n_parts: int, tile: int):
+    """Fused send-side oracle: → (part (N,) with n_parts marking rows past `count`,
+    slot (N,) stable in-partition rank, hist (n_tiles, n_parts))."""
+    n = keys.shape[0]
+    part = (hash_u32_ref(keys) % jnp.uint32(n_parts)).astype(jnp.int32)
+    part = jnp.where(jnp.arange(n) < count, part, jnp.int32(n_parts))
+    onehot = jax.nn.one_hot(part, n_parts + 1, dtype=jnp.int32)
+    slot = (jnp.cumsum(onehot, axis=0) * onehot).sum(axis=1) - 1
+    n_tiles = n // tile
+    hist = onehot[:, :n_parts].reshape(n_tiles, tile, n_parts).sum(axis=1)
+    return part, slot, hist
 
 
 def flash_attention_ref(q, k, v, causal: bool = True):

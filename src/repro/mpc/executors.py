@@ -24,12 +24,22 @@ from __future__ import annotations
 
 import hashlib
 import math
+import time
+import warnings
 from collections import defaultdict
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+# The batched dataplane primitives donate their big stacked input buffers
+# (jax.jit donate_argnums) so multi-op rounds reuse device memory in place.
+# Backends without donation support (CPU) warn per call; the fallback copy is
+# exactly the old behavior, so the warning is noise here.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable", category=UserWarning
+)
 
 from ..core.query import Attr, JoinQuery, Relation, reference_join
 from ..core.taxonomy import heavy_masks, residual_relations
@@ -648,6 +658,17 @@ class DataplaneJoinResult:
     jit_cache_hits: int = 0
     jit_cache_misses: int = 0
     bucket_stage_counts: Dict[str, List[int]] = field(default_factory=dict)
+    #: coarse per-phase wall time (µs) across the whole run: "host_prep"
+    #: (dispatch building: host stacking + staging), "compile" (AOT
+    #: trace+compile of cache misses), "launch" (dispatching executables;
+    #: async — device work overlaps the schedule), "sync" (the one deferred
+    #: device→host readback per bucket — where collective+kernel time
+    #: actually surfaces on the host clock).
+    phase_us: Dict[str, float] = field(default_factory=dict)
+    #: per-round wall time (µs), keyed by op round name — count rounds appear
+    #: under "<round>/count".  Routing rounds ≈ argsort/rank-key + all_to_all;
+    #: "output" rounds ≈ the local merge-join kernels.
+    round_us: Dict[str, float] = field(default_factory=dict)
 
 
 class DataplaneUnsupported(NotImplementedError):
@@ -729,6 +750,52 @@ def _pow2(n: int) -> int:
     """Round a capacity up to a power of two (≥ 16): retries double caps, so
     pow2 buckets make repeated executor calls hit the jit cache."""
     return 1 << max(4, int(n - 1).bit_length() if n > 1 else 0)
+
+
+def _quant(n: int) -> int:
+    """Round an *exactly counted* capacity up onto the {2^k, 3·2^(k-1)} grid
+    (≥ 16).  Denser than pow2 (≤ 33% padding instead of ≤ 100%) — counted
+    capacities are exact, so the grid exists only to keep the executable
+    signature count bounded; doubling a grid value stays on the grid, so the
+    (rare) retry after a salt change still hits the cache."""
+    p2 = _pow2(n)
+    if p2 >= 32 and 3 * (p2 // 4) >= n:
+        return 3 * (p2 // 4)
+    return p2
+
+
+def _pack_radices(a_blocks, b_blocks, dup_pairs) -> Optional[np.ndarray]:
+    """Host-side eligibility check for packed int32 composite join keys.
+
+    The colocated join matches on (cell, dup-attr...) tuples; when every key
+    column is non-negative and the mixed-radix product (max_cell + 1) ·
+    Π (max_dup_i + 1) fits int32, the tuple packs collision-free into one
+    int32 word and the device join can sort scalar keys instead of ranking
+    64-bit composites (see `local_join_filtered`).  Returns the per-dup-column
+    radices, or None for the ranked fallback.  Padding rows are zeros — they
+    can't hide a negative and can't raise a max — so block-level min/max are
+    exact bounds for the valid prefixes."""
+    if not dup_pairs:
+        return None
+    cols_a = [0] + [ca for ca, _ in dup_pairs]
+    cols_b = [0] + [cb for _, cb in dup_pairs]
+    lim = np.iinfo(np.int32).max
+    space = 1
+    rads = []
+    for i, (ca, cb) in enumerate(zip(cols_a, cols_b)):
+        av = np.asarray(a_blocks)[:, :, ca]
+        bv = np.asarray(b_blocks)[:, :, cb]
+        if int(np.min(av, initial=0)) < 0 or int(np.min(bv, initial=0)) < 0:
+            return None
+        hi = int(max(np.max(av, initial=0), np.max(bv, initial=0))) + 1
+        if i == 0:
+            space = hi
+        else:
+            rads.append(hi)
+            space *= hi
+        if space > lim:
+            return None
+    return np.asarray(rads, dtype=np.int32)
 
 
 @dataclass
@@ -856,13 +923,17 @@ class DataplaneExecutor:
         max_retries: int = 6,
         batch_stages: bool = True,
         compiled_cache: Optional[ExecutableCache] = None,
+        exact_caps: bool = True,
     ):
         """Args: ``mesh`` — JAX device mesh (default: one axis over all
         devices); ``slack`` — initial capacity headroom multiplier;
         ``max_retries`` — capacity-doubling attempts before giving up;
         ``batch_stages`` — stage-batched (True) vs per-stage scheduling;
         ``compiled_cache`` — executable cache to use (default: the
-        process-wide :data:`EXECUTABLE_CACHE`)."""
+        process-wide :data:`EXECUTABLE_CACHE`); ``exact_caps`` — size
+        GridRoute/LocalJoin buffers with a collective-free counting pass
+        (count-then-emit) instead of heuristic estimates + overflow retry
+        (``False`` restores the estimate-based sizing)."""
         import jax
 
         if mesh is None:
@@ -896,6 +967,14 @@ class DataplaneExecutor:
         from collections import OrderedDict
 
         self._learned_caps: "OrderedDict" = OrderedDict()
+        #: exact-cap mode: GridRoute/LocalJoin work items without learned caps
+        #: run a cheap collective-free counting dispatch first and size their
+        #: buffers exactly (`_quant` grid) — steady state has zero overflow
+        #: retries by construction, and cold runs stop paying for oversized
+        #: heuristic buffers.
+        self.exact_caps = exact_caps
+        self._phase_us: Dict[str, float] = {}
+        self._round_us: Dict[str, float] = {}
 
     # -- capacity guesses (pow2-bucketed so retries and repeat runs hit the
     # -- jit cache; all of them are starting points for the doubling retry) ---
@@ -923,6 +1002,8 @@ class DataplaneExecutor:
         self._jit_hits = 0
         self._jit_misses = 0
         self._bucket_log: Dict[str, List[int]] = {}
+        self._phase_us = {"host_prep": 0.0, "compile": 0.0, "launch": 0.0, "sync": 0.0}
+        self._round_us = {}
         states = [
             _StageState(stage=st, skey=(st.hkey, st.ekey)) for st in program.stages
         ]
@@ -969,6 +1050,8 @@ class DataplaneExecutor:
             jit_cache_hits=self._jit_hits,
             jit_cache_misses=self._jit_misses,
             bucket_stage_counts={k: list(v) for k, v in self._bucket_log.items()},
+            phase_us=dict(self._phase_us),
+            round_us=dict(self._round_us),
         )
 
     # -- stage-batched scheduler ----------------------------------------------
@@ -1007,6 +1090,30 @@ class DataplaneExecutor:
 
         return finalize, ovf[:s]
 
+    @staticmethod
+    def _hist_post(outs, s: int):
+        """Dispatch postprocessor for count-only routes: a single (s, p_src,
+        p_dst) histogram, structurally overflow-free."""
+        (hist,) = outs
+
+        def finalize(hist=hist):
+            h = np.asarray(hist)
+            return [h[i] for i in range(s)]
+
+        return finalize, np.zeros((s, 1, 2), np.int32)
+
+    @staticmethod
+    def _count_post(outs, s: int):
+        """Dispatch postprocessor for count-only joins: (s, p) match totals
+        plus a structurally-zero overflow channel."""
+        cnt, ovf = outs
+
+        def finalize(cnt=cnt):
+            c = np.asarray(cnt)
+            return [c[i] for i in range(s)]
+
+        return finalize, ovf[:s]
+
     def _run_buckets(self, round_name: str, items: List[_WorkItem], dispatch):
         """The one scheduling + retry harness every lowering rule runs on.
 
@@ -1023,6 +1130,9 @@ class DataplaneExecutor:
         unbatched schedule, same code path."""
         if not items:
             return items
+        t_round = time.perf_counter()
+        phase = self._phase_us
+
         # Learned capacities: start each item at the caps its (round, group,
         # key) slot ended the previous run with — steady-state runs never
         # rediscover the same overflow.  Note the fixed point can take two
@@ -1064,6 +1174,7 @@ class DataplaneExecutor:
             to_compile: Dict[Tuple, Tuple] = {}
             cache = self.compiled_cache
             executables: Dict[Tuple, object] = {}
+            t0 = time.perf_counter()
             for bucket in bucket_list:
                 sig = (
                     self.mesh,
@@ -1086,6 +1197,9 @@ class DataplaneExecutor:
                 self._dispatches += 1
                 self._bucket_log.setdefault(round_name, []).append(len(bucket))
                 prepared.append((bucket, sig, args, post))
+            phase["host_prep"] = phase.get("host_prep", 0.0) + (
+                time.perf_counter() - t0
+            ) * 1e6
 
             # AOT-compile the round's unseen signatures concurrently: XLA
             # compilation releases the GIL, so distinct executables compile
@@ -1094,6 +1208,7 @@ class DataplaneExecutor:
             # different collective programs interleave their all_to_all
             # rendezvous across the device threads and deadlock.
             if to_compile:
+                t0 = time.perf_counter()
 
                 def compile_one(item):
                     sig, (fn, args) = item
@@ -1113,13 +1228,21 @@ class DataplaneExecutor:
                     sig, comp = compile_one(todo[0])
                     cache.put(sig, comp)
                     executables[sig] = comp
+                phase["compile"] = phase.get("compile", 0.0) + (
+                    time.perf_counter() - t0
+                ) * 1e6
 
+            t0 = time.perf_counter()
             launched = []
             for bucket, sig, args, post in prepared:
                 launched.append((bucket, *post(executables[sig](*args))))
+            phase["launch"] = phase.get("launch", 0.0) + (
+                time.perf_counter() - t0
+            ) * 1e6
 
             # one deferred readback per (op, bucket): the scheduler's only
             # host sync — every bucket's collectives are already in flight.
+            t0 = time.perf_counter()
             tripped: Dict[int, set] = {}
             for bucket, finalize, ovf in launched:
                 ovf_np = np.asarray(ovf)
@@ -1133,6 +1256,9 @@ class DataplaneExecutor:
                         kinds.add("out")
                     tripped[id(it)] = kinds
                     it.result = results[i]
+            phase["sync"] = phase.get("sync", 0.0) + (
+                time.perf_counter() - t0
+            ) * 1e6
 
             group_kinds: Dict[Tuple, set] = {}
             for it in pending:
@@ -1169,11 +1295,51 @@ class DataplaneExecutor:
                 retry.append(it)
             pending = retry
         for it in items:
+            if not it.caps:        # count-only rounds carry no capacities
+                continue
             self._learned_caps[(round_name, it.group, it.key)] = dict(it.caps)
             self._learned_caps.move_to_end((round_name, it.group, it.key))
         while len(self._learned_caps) > self._LEARNED_CAPS_CAPACITY:
             self._learned_caps.popitem(last=False)
+        self._round_us[round_name] = self._round_us.get(round_name, 0.0) + (
+            time.perf_counter() - t_round
+        ) * 1e6
         return items
+
+    def _apply_exact_caps(self, round_name, items, count_dispatch, caps_from_count,
+                          floor):
+        """Count-then-emit capacity sizing (``exact_caps=True``).
+
+        Items whose (round, group, key) slot has no learned caps are run
+        through a collective-free ``<round>/count`` pass — same destination /
+        key algebra as the emit, same attempt-0 salts, but a histogram or
+        scalar count instead of an exchange — and their emit caps are set
+        exactly from the result via ``caps_from_count(result)``.  Items that
+        DO have learned caps skip the count and start at ``floor``:
+        `_run_buckets` applies learned caps with a per-channel ``max()``, so
+        the floor must sit below any learned value for the learned (exact)
+        caps to win — starting them at the heuristic guess would re-inflate
+        every steady-state run.  Exactly-sized caps cannot overflow, so the
+        emit pass runs with zero retries and the warm executable set is
+        stable from run 2 onward."""
+        fresh = [
+            it for it in items
+            if not self._learned_caps.get((round_name, it.group, it.key))
+        ]
+        fresh_ids = {id(it) for it in fresh}
+        for it in items:
+            if id(it) not in fresh_ids:
+                it.caps = dict(floor)
+        if not fresh:
+            return
+        counters = [
+            _WorkItem(state=it.state, key=it.key, caps={},
+                      payload=it.payload, group=it.group)
+            for it in fresh
+        ]
+        self._run_buckets(round_name + "/count", counters, count_dispatch)
+        for cit, it in zip(counters, fresh):
+            it.caps = caps_from_count(cit.result)
 
     # -- per-op lowering rules (each batches every live stage of the op) ------
 
@@ -1419,6 +1585,7 @@ class DataplaneExecutor:
             HCBatchSig,
             _pad_table,
             batched_sharded_grid_route,
+            batched_sharded_grid_route_count,
             cp_batch_params,
             hc_batch_params,
         )
@@ -1508,57 +1675,78 @@ class DataplaneExecutor:
                 payload={"pos": pos, "sig": sig, **pl}, group=group,
             ))
 
-        def dispatch(bucket):
-            s, s_pad = len(bucket), self._pow2_stages(len(bucket))
-            sig = bucket[0].payload["sig"]
-            caps = bucket[0].caps
-            pad = s_pad - s
-            cnts = self._stack([it.payload["cnts"] for it in bucket], s_pad)
-            table = np.stack(
-                [_pad_table(it.payload["table"], sig.fanout) for it in bucket]
-                + [np.full((sig.fanout,), -1, np.int32)] * pad
-            )
-            if bucket[0].key[0] == "hc":
-                rows = self._stack([it.payload["blocks"] for it in bucket], s_pad)
-                nf = len(sig.cols)
-                salts = np.ones((s_pad, nf), dtype=np.uint32)
-                shares = np.ones((s_pad, nf), dtype=np.uint32)
-                strides = np.zeros((s_pad, nf), dtype=np.int32)
-                for i, it in enumerate(bucket):
-                    scheme = it.payload["scheme"]
-                    salts[i] = [
-                        _salt(it.state.skey, "hc", scheme[c], attempt=it.attempt)
-                        for c in sig.cols
-                    ]
-                    shares[i] = it.payload["shares"]
-                    strides[i] = it.payload["strides"]
-                fn, args = batched_sharded_grid_route(
-                    self.mesh, self.axis_name, rows, cnts, sig,
-                    salts=salts, shares=shares, strides=strides, table=table,
-                    cap_slot=caps["slot"], cap_out=caps["out"], invoke=False,
+        def make_dispatch(count: bool):
+            def dispatch(bucket):
+                s, s_pad = len(bucket), self._pow2_stages(len(bucket))
+                sig = bucket[0].payload["sig"]
+                caps = bucket[0].caps
+                pad = s_pad - s
+                cnts = self._stack([it.payload["cnts"] for it in bucket], s_pad)
+                table = np.stack(
+                    [_pad_table(it.payload["table"], sig.fanout) for it in bucket]
+                    + [np.full((sig.fanout,), -1, np.int32)] * pad
                 )
-            else:
-                rows = self._stack(
-                    [it.payload["vals"][:, :, None] for it in bucket], s_pad
+                route = (
+                    batched_sharded_grid_route_count
+                    if count else batched_sharded_grid_route
                 )
-                offsets = self._stack(
-                    [np.asarray(it.payload["offsets"], np.int32) for it in bucket],
-                    s_pad,
-                )
-                dims = np.asarray(
-                    [it.payload["dim"] for it in bucket] + [1] * pad, np.int32
-                )
-                scales = np.asarray(
-                    [it.payload["scale"] for it in bucket] + [0] * pad, np.int32
-                )
-                fn, args = batched_sharded_grid_route(
-                    self.mesh, self.axis_name, rows, cnts, sig,
-                    offsets=offsets, dims=dims, scales=scales, table=table,
-                    cap_slot=caps["slot"], cap_out=caps["out"], invoke=False,
-                )
-            return fn, args, partial(self._rows_counts_post, s=s)
+                kw = {} if count else {
+                    "cap_slot": caps["slot"], "cap_out": caps["out"],
+                }
+                if bucket[0].key[0] == "hc":
+                    rows = self._stack([it.payload["blocks"] for it in bucket], s_pad)
+                    nf = len(sig.cols)
+                    salts = np.ones((s_pad, nf), dtype=np.uint32)
+                    shares = np.ones((s_pad, nf), dtype=np.uint32)
+                    strides = np.zeros((s_pad, nf), dtype=np.int32)
+                    for i, it in enumerate(bucket):
+                        scheme = it.payload["scheme"]
+                        salts[i] = [
+                            _salt(it.state.skey, "hc", scheme[c], attempt=it.attempt)
+                            for c in sig.cols
+                        ]
+                        shares[i] = it.payload["shares"]
+                        strides[i] = it.payload["strides"]
+                    fn, args = route(
+                        self.mesh, self.axis_name, rows, cnts, sig,
+                        salts=salts, shares=shares, strides=strides, table=table,
+                        invoke=False, **kw,
+                    )
+                else:
+                    rows = self._stack(
+                        [it.payload["vals"][:, :, None] for it in bucket], s_pad
+                    )
+                    offsets = self._stack(
+                        [np.asarray(it.payload["offsets"], np.int32) for it in bucket],
+                        s_pad,
+                    )
+                    dims = np.asarray(
+                        [it.payload["dim"] for it in bucket] + [1] * pad, np.int32
+                    )
+                    scales = np.asarray(
+                        [it.payload["scale"] for it in bucket] + [0] * pad, np.int32
+                    )
+                    fn, args = route(
+                        self.mesh, self.axis_name, rows, cnts, sig,
+                        offsets=offsets, dims=dims, scales=scales, table=table,
+                        invoke=False, **kw,
+                    )
+                if count:
+                    return fn, args, partial(self._hist_post, s=s)
+                return fn, args, partial(self._rows_counts_post, s=s)
+            return dispatch
 
-        for it in self._run_buckets(op.round, items, dispatch):
+        if self.exact_caps:
+            self._apply_exact_caps(
+                op.round, items, make_dispatch(count=True),
+                caps_from_count=lambda h: {
+                    "slot": _quant(max(1, int(h.max()))),
+                    "out": _quant(max(1, int(h.sum(axis=0).max()))),
+                },
+                floor={"slot": 16, "out": 16},
+            )
+
+        for it in self._run_buckets(op.round, items, make_dispatch(count=False)):
             rows, cnts = it.result
             n = int(cnts.sum())
             if it.key[0] == "hc":
@@ -1582,7 +1770,10 @@ class DataplaneExecutor:
         *filters* wedges into triangles, where the old lexicographic order
         grew Σ deg^k star intermediates that overflowed every output cap)."""
         from ..dataplane.exchange import unblockify
-        from ..dataplane.join import batched_sharded_colocated_join
+        from ..dataplane.join import (
+            batched_sharded_colocated_join,
+            batched_sharded_colocated_join_count,
+        )
 
         for state in states:
             if state.routed is None:
@@ -1618,30 +1809,60 @@ class DataplaneExecutor:
                 out_scheme = a_scheme + [
                     a for i, a in enumerate(b_scheme) if i != 0 and a not in common
                 ]
+                mults = _pack_radices(a_blocks, b_blocks, dup_pairs)
                 items.append(_WorkItem(
                     state=state,
                     key=("join", tuple(a_blocks.shape), tuple(b_blocks.shape),
-                         dup_pairs),
+                         dup_pairs, mults is not None),
                     caps={"out": self._cap(4 * (n_a + n_b))},
                     payload={"a": (a_blocks, a_cnts), "b": (b_blocks, b_cnts),
-                             "dup_pairs": dup_pairs, "scheme": out_scheme},
+                             "dup_pairs": dup_pairs, "scheme": out_scheme,
+                             "mults": mults},
                     group=("join", state.skey),
                 ))
 
-            def dispatch(bucket):
-                s, s_pad = len(bucket), self._pow2_stages(len(bucket))
-                a = self._stack([it.payload["a"][0] for it in bucket], s_pad)
-                ac = self._stack([it.payload["a"][1] for it in bucket], s_pad)
-                b = self._stack([it.payload["b"][0] for it in bucket], s_pad)
-                bc = self._stack([it.payload["b"][1] for it in bucket], s_pad)
-                fn, args = batched_sharded_colocated_join(
-                    self.mesh, self.axis_name, a, ac, b, bc, 0, 0,
-                    cap_out=bucket[0].caps["out"],
-                    dup_pairs=bucket[0].payload["dup_pairs"], invoke=False,
-                )
-                return fn, args, partial(self._rows_counts_post, s=s)
+            def make_dispatch(count: bool):
+                def dispatch(bucket):
+                    s, s_pad = len(bucket), self._pow2_stages(len(bucket))
+                    a = self._stack([it.payload["a"][0] for it in bucket], s_pad)
+                    ac = self._stack([it.payload["a"][1] for it in bucket], s_pad)
+                    b = self._stack([it.payload["b"][0] for it in bucket], s_pad)
+                    bc = self._stack([it.payload["b"][1] for it in bucket], s_pad)
+                    km = None
+                    if bucket[0].key[4]:
+                        # padded stages carry radix 1: their rows are all
+                        # zeros, so the packed key stays 0 and in-bounds
+                        km = np.stack(
+                            [it.payload["mults"] for it in bucket]
+                            + [np.ones_like(bucket[0].payload["mults"])]
+                            * (s_pad - s)
+                        )
+                    if count:
+                        fn, args = batched_sharded_colocated_join_count(
+                            self.mesh, self.axis_name, a, ac, b, bc, 0, 0,
+                            dup_pairs=bucket[0].payload["dup_pairs"],
+                            key_mults=km, invoke=False,
+                        )
+                        return fn, args, partial(self._count_post, s=s)
+                    fn, args = batched_sharded_colocated_join(
+                        self.mesh, self.axis_name, a, ac, b, bc, 0, 0,
+                        cap_out=bucket[0].caps["out"],
+                        dup_pairs=bucket[0].payload["dup_pairs"],
+                        key_mults=km, invoke=False,
+                    )
+                    return fn, args, partial(self._rows_counts_post, s=s)
+                return dispatch
 
-            for it in self._run_buckets(op.round, items, dispatch):
+            if self.exact_caps:
+                self._apply_exact_caps(
+                    op.round, items, make_dispatch(count=True),
+                    caps_from_count=lambda c: {
+                        "out": _quant(max(1, int(c.max()))),
+                    },
+                    floor={"out": 16},
+                )
+
+            for it in self._run_buckets(op.round, items, make_dispatch(count=False)):
                 blocks, cnts = it.result
                 n = int(cnts.sum())
                 it.state.parts[0:2] = [(it.payload["scheme"], blocks, cnts, n)]

@@ -135,6 +135,71 @@ def test_parity_fused_program():
 
 
 # ---------------------------------------------------------------------------
+# Packed int32 composite keys: eligibility + checked fallback
+# ---------------------------------------------------------------------------
+
+
+def _join_packed_flags(ex):
+    """Packed-key decisions recorded in the executor's learned-caps keys:
+    one flag per composite-key LocalJoin bucket (dup_pairs non-empty)."""
+    return [
+        key[4]
+        for (_, _, key) in ex._learned_caps
+        if key and key[0] == "join" and len(key) == 5 and key[3]
+    ]
+
+
+def _run_both_schedules(q, lam, p=8):
+    stats = compute_stats(q, lam)
+    program = compile_plan(q, stats, p)
+    ex = DataplaneExecutor(batch_stages=True)
+    res = ex.run(program)
+    ex_u = DataplaneExecutor(batch_stages=False)
+    res_u = ex_u.run(program)
+    oracle = reference_join(q)
+    assert res.count == len(oracle) == res_u.count
+    assert rows_key(res.rows) == rows_key(oracle.data) == rows_key(res_u.rows)
+    return ex, ex_u
+
+
+def test_key_compression_packs_small_domains():
+    """Cyclic (triangle) query with small vertex ids: every composite-key
+    join bucket passes the int32 eligibility check and takes the packed path."""
+    q = random_query(
+        np.random.default_rng(2), "clique", 3, tuples_per_rel=200, dom_size=30,
+        skew=2.0,
+    )
+    ex, ex_u = _run_both_schedules(q, lam=16)
+    for e in (ex, ex_u):
+        flags = _join_packed_flags(e)
+        assert flags, "triangle chains must produce composite-key joins"
+        assert all(flags), "small domains must take the packed int32 path"
+
+
+def test_key_compression_int32_overflow_takes_ranked_fallback():
+    """Adversarial key space: vertex ids shifted by 5·10^7 keep every value
+    int32-safe, but (max_cell+1)·(max_dup+1) exceeds 2^31, so packing would
+    collide — the eligibility check must reject it and the ranked
+    (lexicographic dense-rank) fallback must produce the identical result on
+    both schedules."""
+    q = random_query(
+        np.random.default_rng(2), "clique", 3, tuples_per_rel=200, dom_size=30,
+        skew=2.0,
+    )
+    shift = 50_000_000
+    q_big = JoinQuery.make(
+        [Relation.make(r.scheme, r.data + shift) for r in q.relations]
+    )
+    ex, ex_u = _run_both_schedules(q_big, lam=16)
+    for e in (ex, ex_u):
+        flags = _join_packed_flags(e)
+        assert flags, "triangle chains must produce composite-key joins"
+        assert not any(flags), (
+            "key space over 2^31 must take the ranked fallback"
+        )
+
+
+# ---------------------------------------------------------------------------
 # Overflow-retry contract (satellites: split channels + fresh randomness)
 # ---------------------------------------------------------------------------
 
@@ -143,7 +208,9 @@ def test_output_only_overflow_scales_cap_out_not_routing():
     """A high-fanout join forces the LocalJoin output estimate to overflow
     while every routing buffer fits: the retry must scale only cap_out.  Runs
     on a 1-device mesh so routing-slot overflow is impossible by construction
-    — any retry the log records is a pure output-capacity retry."""
+    — any retry the log records is a pure output-capacity retry.  Uses
+    ``exact_caps=False``: the legacy estimate+retry path this test exercises
+    (the default count-then-emit path sizes caps exactly and never retries)."""
     import jax
 
     a = np.stack(
@@ -158,7 +225,7 @@ def test_output_only_overflow_scales_cap_out_not_routing():
     stats = compute_stats(q, lam=2)   # threshold m/2: no heavy values
     program = compile_plan(q, stats, p=8)
     mesh = jax.make_mesh((1,), ("join",))
-    ex = DataplaneExecutor(mesh=mesh)
+    ex = DataplaneExecutor(mesh=mesh, exact_caps=False)
     res = ex.run(program)
     oracle = reference_join(q)
     assert res.count == len(oracle) == 20_000
@@ -185,6 +252,7 @@ def _bare_scheduler(batch=True):
     ex._retries, ex._retry_log = 0, []
     ex._dispatches, ex._jit_hits, ex._jit_misses = 0, 0, 0
     ex._bucket_log, ex._learned_caps = {}, OrderedDict()
+    ex._phase_us, ex._round_us = {}, {}
     return ex
 
 

@@ -12,7 +12,14 @@ try:
 except ImportError:  # optional test extra; only the property test needs it
     HAVE_HYPOTHESIS = False
 
-from repro.kernels.ops import fold64, hash_partition, merge_join_counts, ssd_chunk
+from repro.kernels.ops import (
+    fold64,
+    hash_partition,
+    hash_partition_pack,
+    merge_join_counts,
+    merge_join_pairs,
+    ssd_chunk,
+)
 from repro.kernels import ref as kref
 from repro.models.mamba import ssd_reference
 
@@ -63,6 +70,80 @@ else:
         pass
 
 
+def _pairs_fixture(seed, n, m, dom, cap_out):
+    """Sorted sides → (lower, starts, total, expected pair list) for the
+    pair-emission kernel, built the exact way local_sorted_join builds them."""
+    rng = np.random.default_rng(seed)
+    a = np.sort(rng.integers(0, dom, n).astype(np.int32))
+    b = np.sort(rng.integers(0, dom, m).astype(np.int32))
+    lower = np.searchsorted(b, a, side="left").astype(np.int32)
+    upper = np.searchsorted(b, a, side="right").astype(np.int32)
+    counts = upper - lower
+    starts = (np.cumsum(counts) - counts).astype(np.int32)
+    total = int(counts.sum())
+    exp_a = np.concatenate([np.full(c, i, np.int32) for i, c in enumerate(counts)]) \
+        if total else np.zeros(0, np.int32)
+    exp_b = np.concatenate(
+        [lower[i] + np.arange(c, dtype=np.int32) for i, c in enumerate(counts)]
+    ) if total else np.zeros(0, np.int32)
+    return lower, starts, total, exp_a[:cap_out], exp_b[:cap_out]
+
+
+@pytest.mark.parametrize("n,m,dom,cap_out", [
+    (256, 1024, 50, 1 << 13),
+    (300, 1500, 40, 1 << 12),
+    (512, 2048, 10_000, 1 << 10),
+    (1, 7, 3, 64),
+])
+def test_merge_join_pairs_matches_ref_and_expansion(n, m, dom, cap_out):
+    lower, starts, total, exp_a, exp_b = _pairs_fixture(n + m + dom, n, m, dom, cap_out)
+    out_k = merge_join_pairs(
+        jnp.asarray(lower), jnp.asarray(starts), cap_out, use_pallas=True
+    )
+    out_r = merge_join_pairs(
+        jnp.asarray(lower), jnp.asarray(starts), cap_out, use_pallas=False
+    )
+    # kernel ≡ jnp reference on the full padded range (pads alias the last key
+    # in both paths), and both enumerate exactly the true pair list up front
+    for k, r in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+    v = min(total, cap_out)
+    np.testing.assert_array_equal(np.asarray(out_k[0])[:v], exp_a[:v])
+    np.testing.assert_array_equal(np.asarray(out_k[1])[:v], exp_b[:v])
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 1_000),
+        n=st.integers(1, 700),
+        m=st.integers(1, 2000),
+        dom=st.integers(1, 300),
+        cap_log=st.integers(4, 12),
+    )
+    def test_merge_join_pairs_property(seed, n, m, dom, cap_log):
+        cap_out = 1 << cap_log
+        lower, starts, total, exp_a, exp_b = _pairs_fixture(seed, n, m, dom, cap_out)
+        a_idx, b_idx = merge_join_pairs(
+            jnp.asarray(lower), jnp.asarray(starts), cap_out, use_pallas=True
+        )
+        a_ref, b_ref = merge_join_pairs(
+            jnp.asarray(lower), jnp.asarray(starts), cap_out, use_pallas=False
+        )
+        np.testing.assert_array_equal(np.asarray(a_idx), np.asarray(a_ref))
+        np.testing.assert_array_equal(np.asarray(b_idx), np.asarray(b_ref))
+        v = min(total, cap_out)
+        np.testing.assert_array_equal(np.asarray(a_idx)[:v], exp_a[:v])
+        np.testing.assert_array_equal(np.asarray(b_idx)[:v], exp_b[:v])
+
+else:
+
+    @pytest.mark.skip(reason="property test needs the optional hypothesis extra")
+    def test_merge_join_pairs_property():
+        pass
+
+
 def test_merge_join_total_pairs_vs_join():
     """Σ counts == |A ⋈ B| on the shared key."""
     rng = np.random.default_rng(7)
@@ -91,6 +172,64 @@ def test_hash_partition_matches_ref(n, parts):
         np.asarray(hist), np.bincount(np.asarray(part), minlength=parts)
     )
     assert int(np.asarray(hist).sum()) == n
+
+
+def _pack_check(keys, count, parts):
+    """Semantic contract of the fused pack: rows before ``count`` carry their
+    hash partition and a stable in-partition rank; rows at or past ``count``
+    are ghosted to partition id ``parts``."""
+    part, slot, send = hash_partition_pack(jnp.asarray(keys), count, parts)
+    part, slot, send = np.asarray(part), np.asarray(slot), np.asarray(send)
+    ref_part, _ = hash_partition(jnp.asarray(keys), parts)
+    ref_part = np.asarray(ref_part)
+    n = len(keys)
+    assert np.all(part[count:] == parts)
+    np.testing.assert_array_equal(part[:count], ref_part[:count])
+    for pid in range(parts):
+        ranks = slot[:count][part[:count] == pid]
+        np.testing.assert_array_equal(np.sort(ranks), np.arange(len(ranks)))
+        assert send[pid] == len(ranks)
+    assert int(send.sum()) == int(count)
+    return part, slot, send
+
+
+@pytest.mark.parametrize("n,parts", [(1024, 8), (4096, 64), (1000, 16)])
+@pytest.mark.parametrize("frac", [1.0, 0.7])
+def test_hash_partition_pack_matches_ref(n, parts, frac):
+    rng = np.random.default_rng(n * parts)
+    keys = rng.integers(-(2**62), 2**62, n).astype(np.int64)
+    count = int(n * frac)
+    out_k = hash_partition_pack(jnp.asarray(keys), count, parts, use_pallas=True)
+    out_r = hash_partition_pack(jnp.asarray(keys), count, parts, use_pallas=False)
+    for k, r in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+    _pack_check(keys, count, parts)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 1_000),
+        n=st.integers(1, 2000),
+        parts=st.sampled_from([2, 8, 32, 128]),
+        frac=st.floats(0.0, 1.0),
+    )
+    def test_hash_partition_pack_property(seed, n, parts, frac):
+        rng = np.random.default_rng(seed)
+        keys = rng.integers(-(2**62), 2**62, n).astype(np.int64)
+        count = int(n * frac)
+        out_k = hash_partition_pack(jnp.asarray(keys), count, parts, use_pallas=True)
+        out_r = hash_partition_pack(jnp.asarray(keys), count, parts, use_pallas=False)
+        for k, r in zip(out_k, out_r):
+            np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+        _pack_check(keys, count, parts)
+
+else:
+
+    @pytest.mark.skip(reason="property test needs the optional hypothesis extra")
+    def test_hash_partition_pack_property():
+        pass
 
 
 def test_hash_partition_balanced():
