@@ -157,6 +157,17 @@ def run(report):
                 "dataplane_dispatches": int(e.dispatches),
                 "dataplane_jit_misses": int(e.jit_cache_misses),
                 "dataplane_cold_jit_misses": int(ce.jit_cache_misses),
+                # per-phase / per-round breakdown of the warm run, so a warm
+                # regression in the history localizes itself (host prep vs
+                # launch vs sync; which op round grew) without a re-profile
+                "warm_phase_us": {
+                    k: round(v, 1)
+                    for k, v in sorted(getattr(e, "phase_us", {}).items())
+                },
+                "warm_round_us": {
+                    k: round(v, 1)
+                    for k, v in sorted(getattr(e, "round_us", {}).items())
+                },
             }
         )
 

@@ -80,6 +80,18 @@ def compare(prev, curr, threshold: float):
         )
         if dwarm > threshold:
             regressions.append((name, dwarm))
+        # Throughput cases additionally gate on measured closed-loop qps:
+        # a drop beyond the threshold fails even when the per-query warm
+        # latency column stayed flat (coalescing wins live in qps, not in
+        # single-query latency).
+        qp, qn = old.get("qps_warm"), cur.get("qps_warm")
+        if qp and qn:
+            dqps = (qp - qn) / max(qp, 1e-9)
+            lines.append(
+                f"{name:<16} qps {qp:8.1f} → {qn:8.1f}  ({-dqps:+7.0%})"
+            )
+            if dqps > threshold:
+                regressions.append((f"{name} (qps)", dqps))
     dropped = sorted(prev_cases.keys() - curr_cases.keys())
     for name in dropped:
         lines.append(f"{name:<16} (dropped from latest snapshot)")

@@ -22,12 +22,15 @@ from .program import (
     RouteResidual,
     Scatter,
     SemiJoin,
+    coalesce_signature,
     compile_plan,
     fuse_semijoin_pass,
     histogram_signature,
     plan_cache_key,
+    programs_coalescible,
 )
 from .executors import (
+    BatchRunStats,
     DataplaneExecutor,
     DataplaneJoinResult,
     DataplaneUnsupported,
@@ -35,5 +38,10 @@ from .executors import (
     MPCJoinResult,
     SimulatorExecutor,
 )
-from .service import JoinSession, ServiceStats, SessionResult
+from .service import (
+    AdmissionError,
+    JoinSession,
+    ServiceStats,
+    SessionResult,
+)
 from .engine import mpc_join

@@ -657,6 +657,12 @@ class DataplaneJoinResult:
     dispatches: int = 0
     jit_cache_hits: int = 0
     jit_cache_misses: int = 0
+    #: learned-caps store outcomes for this run, distinct from the plan LRU
+    #: and the executable cache: a caps hit means a work item started at the
+    #: capacities a previous run converged to (the no-overflow warm path).
+    caps_hits: int = 0
+    caps_misses: int = 0
+    caps_evictions: int = 0
     bucket_stage_counts: Dict[str, List[int]] = field(default_factory=dict)
     #: coarse per-phase wall time (µs) across the whole run: "host_prep"
     #: (dispatch building: host stacking + staging), "compile" (AOT
@@ -799,15 +805,47 @@ def _pack_radices(a_blocks, b_blocks, dup_pairs) -> Optional[np.ndarray]:
 
 
 @dataclass
+class BatchRunStats:
+    """Scheduler-level counters of one (possibly multi-program) executor run.
+
+    A coalesced :meth:`DataplaneExecutor.run_many` shares every dispatch,
+    executable, and phase timer across all member queries, so these counters
+    exist once per *batch* — summing them per member query would multi-count.
+    The per-query :class:`DataplaneJoinResult` carries them too (documented
+    as batch-level when coalesced) plus its own per-query retries."""
+
+    queries: int = 1
+    dispatches: int = 0
+    jit_cache_hits: int = 0
+    jit_cache_misses: int = 0
+    retries: int = 0
+    retry_log: List[Tuple[Tuple, str, str]] = field(default_factory=list)
+    caps_hits: int = 0
+    caps_misses: int = 0
+    caps_evictions: int = 0
+    bucket_stage_counts: Dict[str, List[int]] = field(default_factory=dict)
+    phase_us: Dict[str, float] = field(default_factory=dict)
+    round_us: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
 class _StageState:
     """Device-resident state of one (H, η) stage as it flows through the ops.
 
     ``skip_count`` mirrors the simulator's geo.skip rule exactly: a stage whose
     isolated R''_X is empty never reaches LocalJoin, so it contributes *no*
-    per-H count entry; every other stage contributes one (possibly 0)."""
+    per-H count entry; every other stage contributes one (possibly 0).
+
+    ``program``/``qi`` bind the stage back to its owning program in a
+    coalesced :meth:`DataplaneExecutor.run_many` run — ``skey`` deliberately
+    stays query-*unqualified* so the routing salts (and hence the result
+    bytes) of a coalesced stage are identical to a serial run of the same
+    program."""
 
     stage: ProgramStage
     skey: Tuple
+    program: Optional[RoundProgram] = None
+    qi: int = 0
     light: Optional[List] = None          # [(scheme, blocks, counts, n_rows)]
     unary: Optional[Dict[Attr, List]] = None   # x -> [(vals, counts, n)] staged
     host_piece_n: Optional[Dict[Attr, int]] = None  # |R''_X| (host cross-check)
@@ -830,12 +868,14 @@ class _WorkItem:
     ``key`` is the static bucket signature: everything that shapes the
     compiled executable except the capacities (op kind, route spec, input
     block shapes).  Items sharing (key, caps) form one *geometry bucket* and
-    ride a single fused dispatch.  ``group`` is the retry unit: when any
-    member of a group overflows, every member re-runs at the next attempt
-    (fresh salts), but only the members whose own overflow tensor tripped get
-    their capacity doubled — HC grid routes group all light fragments of a
-    stage (their per-attribute salts must advance together), everything else
-    groups per fragment."""
+    ride a single fused dispatch.  ``group`` is the retry unit: when a *slot*
+    overflow re-randomizes the routing, every member re-runs at the next
+    attempt (fresh salts) — HC grid routes group all light fragments of a
+    stage because their per-attribute salts must advance together.  An
+    *out*-only overflow re-runs just the tripped members with a grown output
+    buffer and the salts untouched, so row order stays independent of
+    capacity history.  ``attempt`` indexes the salts; ``retries`` counts a
+    member's re-runs (growth pacing + the max_retries limit)."""
 
     state: _StageState
     key: Tuple
@@ -843,6 +883,7 @@ class _WorkItem:
     payload: Dict
     group: Tuple
     attempt: int = 0
+    retries: int = 0
     result: object = None
 
 
@@ -967,6 +1008,12 @@ class DataplaneExecutor:
         from collections import OrderedDict
 
         self._learned_caps: "OrderedDict" = OrderedDict()
+        #: executor-lifetime learned-caps meters (per-run counts land on
+        #: :class:`DataplaneJoinResult`); split from the plan-LRU and
+        #: executable-cache counters so cache provenance is unambiguous.
+        self.caps_hits = 0
+        self.caps_misses = 0
+        self.caps_evictions = 0
         #: exact-cap mode: GridRoute/LocalJoin work items without learned caps
         #: run a cheap collective-free counting dispatch first and size their
         #: buffers exactly (`_quant` grid) — steady state has zero overflow
@@ -995,20 +1042,64 @@ class DataplaneExecutor:
     # -- public entry ---------------------------------------------------------
 
     def run(self, program: RoundProgram, materialize: bool = True) -> DataplaneJoinResult:
+        results, _ = self.run_many([program], materialize=materialize)
+        return results[0]
+
+    def run_many(
+        self, programs: List[RoundProgram], materialize: bool = True
+    ) -> Tuple[List[DataplaneJoinResult], BatchRunStats]:
+        """Run several compiled programs through ONE pass of the scheduler.
+
+        This is the cross-query half of the stage-batched scheduler: every
+        program's stages become work items of the *same* op rounds, so stages
+        from different queries landing in the same geometry bucket ride one
+        fused ``shard_map`` dispatch — the collective stream stays strictly
+        serial (concurrent collective executions deadlock) while each
+        dispatch serves many queries.  The programs must be coalescible
+        (identical op sequences — see
+        :func:`repro.mpc.program.coalesce_signature`); anything else raises.
+
+        Results demultiplex exactly: each query keeps its own counts, rows,
+        ``per_h_counts`` and per-query retries (attributed through the
+        owning stage), and a coalesced stage produces byte-identical rows to
+        a serial :meth:`run` of its program — salts derive from the
+        query-unqualified stage key, and capacities never change result
+        content (padding is sliced off by the tracked counts).
+
+        Returns ``(results, batch)`` where ``batch`` carries the shared
+        scheduler counters exactly once (each result also carries them,
+        documented as batch-level)."""
+        if not programs:
+            return [], BatchRunStats(queries=0)
+        ops = programs[0].ops
+        for prog in programs[1:]:
+            if prog.ops != ops:
+                raise ValueError(
+                    "run_many needs coalescible programs (identical op "
+                    f"sequences); got {programs[0].op_sequence()} vs "
+                    f"{prog.op_sequence()}"
+                )
         self._retries = 0
         self._retry_log: List[Tuple[Tuple, str, str]] = []
+        self._qi_retries: Dict[int, int] = defaultdict(int)
+        self._qi_retry_log: Dict[int, List] = defaultdict(list)
         self._materialize = materialize
         self._dispatches = 0
         self._jit_hits = 0
         self._jit_misses = 0
+        self._caps_hits = 0
+        self._caps_misses = 0
+        self._caps_evictions = 0
         self._bucket_log: Dict[str, List[int]] = {}
         self._phase_us = {"host_prep": 0.0, "compile": 0.0, "launch": 0.0, "sync": 0.0}
         self._round_us = {}
         states = [
-            _StageState(stage=st, skey=(st.hkey, st.ekey)) for st in program.stages
+            _StageState(stage=st, skey=(st.hkey, st.ekey), program=prog, qi=qi)
+            for qi, prog in enumerate(programs)
+            for st in prog.stages
         ]
 
-        for op in program.ops:
+        for op in ops:
             try:
                 lower = getattr(self, self._LOWERING[type(op)])
             except KeyError:
@@ -1017,42 +1108,64 @@ class DataplaneExecutor:
                 ) from None
             live = [state for state in states if not state.empty]
             if live:
-                lower(program, live, op)
+                lower(programs[0], live, op)
 
-        counts: Dict[Tuple[Attr, ...], int] = defaultdict(int)
-        chunks: List[np.ndarray] = []
-        for mid, row in program.emit:
-            chunks.append(row)
-        for hkey, c in program.emit_counts.items():
-            counts[hkey] += c
-        for state in states:
-            if state.skip_count:
-                continue
-            counts[state.stage.hkey] += state.n_out
-            if state.rows is not None and state.rows.shape[0]:
-                chunks.append(state.rows)
-
-        rows_out = None
-        if materialize:
-            rows_out = (
-                np.concatenate(chunks, axis=0)
-                if chunks
-                else np.zeros((0, len(program.out_cols)), dtype=np.int64)
-            )
-        return DataplaneJoinResult(
-            p=self.p,
-            count=sum(counts.values()),
-            rows=rows_out,
-            per_h_counts=dict(counts),
-            retries=self._retries,
-            retry_log=list(self._retry_log),
+        batch = BatchRunStats(
+            queries=len(programs),
             dispatches=self._dispatches,
             jit_cache_hits=self._jit_hits,
             jit_cache_misses=self._jit_misses,
+            retries=self._retries,
+            retry_log=list(self._retry_log),
+            caps_hits=self._caps_hits,
+            caps_misses=self._caps_misses,
+            caps_evictions=self._caps_evictions,
             bucket_stage_counts={k: list(v) for k, v in self._bucket_log.items()},
             phase_us=dict(self._phase_us),
             round_us=dict(self._round_us),
         )
+        results: List[DataplaneJoinResult] = []
+        for qi, program in enumerate(programs):
+            counts: Dict[Tuple[Attr, ...], int] = defaultdict(int)
+            chunks: List[np.ndarray] = []
+            for mid, row in program.emit:
+                chunks.append(row)
+            for hkey, c in program.emit_counts.items():
+                counts[hkey] += c
+            for state in states:
+                if state.qi != qi or state.skip_count:
+                    continue
+                counts[state.stage.hkey] += state.n_out
+                if state.rows is not None and state.rows.shape[0]:
+                    chunks.append(state.rows)
+
+            rows_out = None
+            if materialize:
+                rows_out = (
+                    np.concatenate(chunks, axis=0)
+                    if chunks
+                    else np.zeros((0, len(program.out_cols)), dtype=np.int64)
+                )
+            results.append(DataplaneJoinResult(
+                p=self.p,
+                count=sum(counts.values()),
+                rows=rows_out,
+                per_h_counts=dict(counts),
+                retries=self._qi_retries.get(qi, 0),
+                retry_log=list(self._qi_retry_log.get(qi, [])),
+                dispatches=batch.dispatches,
+                jit_cache_hits=batch.jit_cache_hits,
+                jit_cache_misses=batch.jit_cache_misses,
+                caps_hits=batch.caps_hits,
+                caps_misses=batch.caps_misses,
+                caps_evictions=batch.caps_evictions,
+                bucket_stage_counts={
+                    k: list(v) for k, v in batch.bucket_stage_counts.items()
+                },
+                phase_us=dict(batch.phase_us),
+                round_us=dict(batch.round_us),
+            ))
+        return results, batch
 
     # -- stage-batched scheduler ----------------------------------------------
 
@@ -1122,9 +1235,10 @@ class DataplaneExecutor:
         ``finalize()`` pulls the bucket's outputs host-side and returns the
         per-item results — then performs **one deferred readback per
         bucket**, after every bucket's collectives are in flight.
-        Items whose retry group tripped are re-bucketed at ``attempt + 1``
-        (fresh salts) with only their own overflowed channels doubled; one
-        retry-log entry per (group, attempt) carries the union of the group's
+        A *slot* trip re-buckets the whole retry group at ``attempt + 1``
+        (fresh salts); an *out*-only trip re-buckets just the tripped items
+        with their output channel grown and the salts untouched; one
+        retry-log entry per (group, pass) carries the union of the group's
         channels, exactly like the per-stage harness it replaces.  With
         ``batch_stages=False`` every item forms a singleton bucket — the
         unbatched schedule, same code path."""
@@ -1147,14 +1261,29 @@ class DataplaneExecutor:
                 self._learned_caps.move_to_end((round_name, it.group, it.key))
                 for ch in it.caps:
                     it.caps[ch] = max(it.caps[ch], learned[ch])
+            # meter the learned-caps store separately from the plan LRU /
+            # executable cache (count-only items carry no capacities and are
+            # not capacity consumers, so they don't meter)
+            if it.caps:
+                if learned:
+                    self._caps_hits += 1
+                    self.caps_hits += 1
+                else:
+                    self._caps_misses += 1
+                    self.caps_misses += 1
         # Cap harmonization: items sharing a static key start from the group
         # max per channel.  A pure function of the round's item set — NOT of
         # the bucketing — so batched and unbatched schedules see identical
         # capacities and hence identical overflow/retry behavior, while
         # same-key items coalesce into one bucket instead of one per pow2 cap.
+        # Scoped per query index: in a coalesced multi-program run each
+        # program harmonizes only against itself, so its capacities (and the
+        # learned caps written back) are exactly what its serial run would
+        # produce — cross-query items still fuse whenever their caps coincide
+        # naturally, which is the same-shape case coalescing targets.
         by_key: Dict[Tuple, List[_WorkItem]] = {}
         for it in items:
-            by_key.setdefault(it.key, []).append(it)
+            by_key.setdefault((it.state.qi, it.key), []).append(it)
         for group in by_key.values():
             for ch in group[0].caps:
                 m = max(g.caps[ch] for g in group)
@@ -1268,26 +1397,55 @@ class DataplaneExecutor:
             retry: List[_WorkItem] = []
             logged = set()
             for it in pending:          # original item order → deterministic log
-                if it.group not in group_kinds:
+                kinds = group_kinds.get(it.group)
+                if not kinds:
+                    continue
+                # *slot* overflow re-randomizes the routing: the whole group
+                # advances to fresh attempt salts together (their per-attribute
+                # salts must stay consistent).  An *out*-only overflow grows
+                # the output buffer of just the tripped members — the salts
+                # (and hence row destinations and order) are untouched, so
+                # untripped groupmates keep their finished results and the
+                # retried members produce the exact bytes a run that started
+                # at the larger cap would have.  Row order therefore never
+                # depends on capacity history — the invariant the cross-query
+                # coalescing layer's byte-identity guarantee rests on.
+                resalt = "slot" in kinds
+                if not resalt and not tripped[id(it)]:
                     continue
                 if it.group not in logged:
                     logged.add(it.group)
                     self._retries += 1
-                    self._retry_log.append(
-                        (
-                            it.state.skey,
-                            round_name,
-                            "+".join(sorted(group_kinds[it.group])),
-                        )
+                    entry = (
+                        it.state.skey,
+                        round_name,
+                        "+".join(sorted(kinds)),
                     )
+                    self._retry_log.append(entry)
+                    # per-query attribution: a retry group normally belongs to
+                    # one query; identical coalesced queries can share one
+                    # (same stage key ⇒ same salts), in which case the retry
+                    # is charged to every member that actually re-ran.
+                    for qi in sorted(
+                        {
+                            x.state.qi
+                            for x in pending
+                            if x.group == it.group
+                            and (resalt or tripped[id(x)])
+                        }
+                    ):
+                        self._qi_retries[qi] += 1
+                        self._qi_retry_log[qi].append(entry)
                 # grow only the tripped channels: ×2 on the first retry, ×4
                 # afterwards — a repeat trip means the guess was far off, and
                 # every extra attempt is a fresh trace+compile at a new shape,
                 # which costs far more than the padding it saves
                 for ch in tripped[id(it)]:
-                    it.caps[ch] *= 2 if it.attempt == 0 else 4
-                it.attempt += 1
-                if it.attempt > self.max_retries:
+                    it.caps[ch] *= 2 if it.retries == 0 else 4
+                if resalt:
+                    it.attempt += 1
+                it.retries += 1
+                if it.retries > self.max_retries:
                     raise RuntimeError(
                         f"stage {it.state.skey} op {round_name} still overflows "
                         f"after {self.max_retries} capacity doublings"
@@ -1301,6 +1459,8 @@ class DataplaneExecutor:
             self._learned_caps.move_to_end((round_name, it.group, it.key))
         while len(self._learned_caps) > self._LEARNED_CAPS_CAPACITY:
             self._learned_caps.popitem(last=False)
+            self._caps_evictions += 1
+            self.caps_evictions += 1
         self._round_us[round_name] = self._round_us.get(round_name, 0.0) + (
             time.perf_counter() - t_round
         ) * 1e6
@@ -1349,6 +1509,19 @@ class DataplaneExecutor:
         happens when RouteResidual stages the carved residuals."""
 
     def _lower_route_residual(self, program, states, op) -> None:
+        # Residual carving is per program: group the live stages by owning
+        # query (run_many coalescing) and stage each program with its own
+        # histogram, masks, and program-wide unary caps — block shapes are
+        # then identical to a serial run of that program, which is what keeps
+        # coalesced results byte-identical to serial submits.
+        groups: Dict[int, List[_StageState]] = {}
+        for state in states:
+            groups.setdefault(state.qi, []).append(state)
+        for qi in sorted(groups):
+            pstates = groups[qi]
+            self._route_residual_one(pstates[0].program, pstates)
+
+    def _route_residual_one(self, program, states) -> None:
         from ..dataplane.exchange import blockify
 
         query, stats = program.query, program.stats
@@ -1575,7 +1748,7 @@ class DataplaneExecutor:
                 x: list(enumerate(int(c) for c in state.pieces[x][1].tolist()))
                 for x in state.stage.plan.isolated
             }
-            state.geo = stage_geometry(program, state.stage, entries)
+            state.geo = stage_geometry(state.program, state.stage, entries)
             if state.geo.skip:
                 state.empty, state.skip_count = True, True
 
@@ -1637,9 +1810,13 @@ class DataplaneExecutor:
                 }))
                 pos += 1
 
+        # Fanout merging is scoped per query index: a coalesced multi-program
+        # round must give each program the same fanout pow2s (and hence the
+        # same bucket keys and learned-caps slots) as its own serial run, so
+        # one query's huge broadcast never inflates another query's routes.
         group_fanout: Dict[Tuple, int] = {}
         for state, kind, pos, pl in raw:
-            gk = (kind, pl.get("cols"))
+            gk = (state.qi, kind, pl.get("cols"))
             group_fanout[gk] = max(group_fanout.get(gk, 1), len(pl["table"]))
 
         items: List[_WorkItem] = []
@@ -1649,7 +1826,7 @@ class DataplaneExecutor:
             # executable at bounded sentinel padding, while a small fragment
             # next to a huge broadcast keeps its own pow2 instead of paying
             # the giant's table.
-            f_max = _pow2(group_fanout[(kind, pl.get("cols"))])
+            f_max = _pow2(group_fanout[(state.qi, kind, pl.get("cols"))])
             own = _pow2(len(pl["table"]))
             fanout = f_max if own * self.fanout_merge_ratio >= f_max else own
             n = pl["n"]
@@ -1885,5 +2062,5 @@ class DataplaneExecutor:
                     axis=1,
                 )
                 out_scheme = out_scheme + [a]
-            perm = [out_scheme.index(a) for a in program.out_cols]
+            perm = [out_scheme.index(a) for a in state.program.out_cols]
             state.rows = rows[:, perm]

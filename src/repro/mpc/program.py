@@ -466,6 +466,45 @@ def plan_cache_key(
     )
 
 
+def coalesce_signature(program: RoundProgram) -> Tuple:
+    """Bucket-layer compatibility key for cross-query coalescing.
+
+    Two compiled programs with equal signatures run the *same op sequence*
+    over the *same machine count*, which is exactly what
+    :meth:`StageBatchedDataplaneExecutor.run_many` requires to drive several
+    programs through one scheduling pass: each op lowers every program's
+    stages into one shared work-item round, and stages whose geometry buckets
+    coincide fuse into one stacked dispatch.  The bucket histogram rides
+    along so schedulers (and the service drainer) can see *how much* fusion
+    to expect: equal histograms mean the stacked round has the same bucket
+    population as replaying one program ``k`` times — the perfect-fusion
+    case — while differing histograms still coalesce, just with partially
+    shared buckets.
+
+    Deliberately coarser than :func:`plan_cache_key`: data identity, heavy
+    value sets, and λ are absent, because the stage axis is data-blind —
+    only op order and block geometry decide whether dispatches merge."""
+    return (
+        program.p,
+        tuple(program.op_sequence()),
+        tuple(sorted(
+            ((sig, n) for sig, n in program.bucket_histogram().items()),
+            key=repr,
+        )),
+    )
+
+
+def programs_coalescible(a: RoundProgram, b: RoundProgram) -> bool:
+    """True when ``a`` and ``b`` may share one batched scheduling pass.
+
+    The hard requirement (checked again by ``run_many``) is identical op
+    sequences on identical ``p``; the histogram component of
+    :func:`coalesce_signature` additionally demands matching bucket shapes,
+    which is the profitable case — so this predicate is the service
+    drainer's grouping rule, not merely the executor's legality rule."""
+    return coalesce_signature(a) == coalesce_signature(b)
+
+
 def fuse_semijoin_pass(program: RoundProgram) -> RoundProgram:
     """Program rewrite: replace SemiJoin[x] + SemiJoin[y] with the fused pair.
 

@@ -29,10 +29,28 @@ concrete tuples (``compile_plan`` reads only structure + ``HeavyStats``).
     scatter placement on the simulator, one unique-count pass for the
     histogram on the dataplane (the cross-query extension of the
     shared-input Scatter path).
+  * **Cross-query coalescing.**  :meth:`JoinSession.submit_async` enqueues
+    requests into a bounded submission queue; a drainer thread groups queued
+    queries whose compiled programs share a
+    :func:`~repro.mpc.program.coalesce_signature` and runs each group through
+    ONE pass of the stage-batched scheduler
+    (:meth:`DataplaneExecutor.run_many`) — stages from different queries
+    landing in the same geometry bucket ride one fused ``shard_map``
+    dispatch, so the strictly serial collective stream (concurrent
+    collective executions deadlock) serves many queries per dispatch.
+    Identical submissions (same plan key, same bound tables) collapse
+    further: one member executes and the rest share its result.  Results
+    demultiplex per query with correct counts/stats and are byte-identical
+    to serial :meth:`submit` (tests/test_service_async.py).
+    :meth:`JoinSession.submit_coalesced` is the same machinery as a
+    synchronous call.  Admission control is a bounded queue: a full queue
+    rejects with :class:`AdmissionError` (backpressure) instead of queueing
+    unboundedly.
   * **Observability.**  Every submit returns a :class:`SessionResult` with
     per-phase latency and cache provenance; :attr:`JoinSession.stats`
-    accumulates the session-wide :class:`ServiceStats` (hit/miss counts,
-    cold-vs-warm latency).
+    accumulates the session-wide :class:`ServiceStats` (hit/miss counts per
+    cache — plan LRU, learned caps, and executables metered separately —
+    cold/warm/e2e latency windows with percentiles, and SLO counters).
 
 ``mpc_join`` remains the one-shot path and is implemented as a throwaway
 session (see :mod:`repro.mpc.engine`); session and one-shot results are
@@ -41,8 +59,12 @@ row-multiset identical on both backends (``tests/test_service.py``).
 
 from __future__ import annotations
 
+import math
+import queue as queue_mod
+import threading
 import time
 from collections import OrderedDict, deque
+from concurrent.futures import Future
 from dataclasses import dataclass, field, replace
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -56,7 +78,7 @@ from .executors import (
     MPCJoinResult,
     SimulatorExecutor,
 )
-from .program import RoundProgram, compile_plan, plan_cache_key
+from .program import RoundProgram, coalesce_signature, compile_plan, plan_cache_key
 from .simulator import MPCSimulator
 from .statistics import distributed_stats
 
@@ -65,16 +87,39 @@ from .statistics import distributed_stats
 LATENCY_WINDOW = 512
 
 
+class AdmissionError(RuntimeError):
+    """The submission queue is full — the request was rejected, not queued.
+
+    Backpressure signal of the bounded async queue: callers should retry
+    later or shed load; ``ServiceStats.rejected`` counts these."""
+
+
 @dataclass
 class ServiceStats:
     """Session-wide service counters (live object on :attr:`JoinSession.stats`).
 
-    ``plan_hits``/``plan_misses`` meter the plan LRU; ``jit_hits``/
-    ``jit_misses``/``retries`` aggregate the dataplane scheduler's per-run
-    counters; ``cold_us``/``warm_us`` collect end-to-end submit latencies
-    split by plan-cache outcome (cold = the submit compiled a new plan) over
-    a sliding window of the last :data:`LATENCY_WINDOW` submits each — a
-    bounded store, like every other cache in this layer."""
+    Each cache layer meters separately so provenance is unambiguous:
+    ``plan_hits``/``plan_misses``/``plan_evictions`` are the plan LRU;
+    ``caps_hits``/``caps_misses``/``caps_evictions`` are the executor's
+    learned-overflow-caps store (a *capacity* cache — its eviction cannot
+    change results, only cause one rediscovery retry); ``jit_hits``/
+    ``jit_misses`` are the process-wide executable cache.  ``retries``
+    aggregates the dataplane scheduler's overflow retries.
+
+    ``cold_us``/``warm_us`` collect per-submit service latencies split by
+    plan-cache outcome (cold = the submit compiled a new plan) and
+    ``e2e_us`` collects queue-inclusive latencies of async submits, each
+    over a sliding window of the last :data:`LATENCY_WINDOW` samples — a
+    bounded store, like every other cache in this layer.  ``percentile``
+    reads any window; ``slo_ok``/``slo_violations`` count submits against
+    the session's ``slo_target_us`` (e2e when queued, service time
+    otherwise).
+
+    The coalescing layer adds: ``async_submits`` (requests entering the
+    queue), ``rejected`` (admission-control bounces), ``coalesced_batches``/
+    ``coalesced_queries``/``max_coalesced_batch`` (multi-query drains), and
+    ``deduped`` (requests served by sharing an identical member's
+    execution)."""
 
     submits: int = 0
     plan_hits: int = 0
@@ -84,8 +129,20 @@ class ServiceStats:
     jit_hits: int = 0
     jit_misses: int = 0
     retries: int = 0
+    caps_hits: int = 0
+    caps_misses: int = 0
+    caps_evictions: int = 0
+    async_submits: int = 0
+    rejected: int = 0
+    coalesced_batches: int = 0
+    coalesced_queries: int = 0
+    max_coalesced_batch: int = 0
+    deduped: int = 0
+    slo_ok: int = 0
+    slo_violations: int = 0
     cold_us: Deque[float] = field(default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
     warm_us: Deque[float] = field(default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
+    e2e_us: Deque[float] = field(default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
 
     @property
     def mean_cold_us(self) -> float:
@@ -94,6 +151,20 @@ class ServiceStats:
     @property
     def mean_warm_us(self) -> float:
         return sum(self.warm_us) / len(self.warm_us) if self.warm_us else 0.0
+
+    def percentile(self, q: float, window: str = "warm") -> float:
+        """Latency percentile over one sliding window (``warm``/``cold``/
+        ``e2e``), linearly interpolated; 0.0 on an empty window."""
+        if window not in ("warm", "cold", "e2e"):
+            raise ValueError(f"unknown latency window {window!r}")
+        samples = sorted(getattr(self, f"{window}_us"))
+        if not samples:
+            return 0.0
+        rank = (q / 100.0) * (len(samples) - 1)
+        lo = int(math.floor(rank))
+        hi = min(lo + 1, len(samples) - 1)
+        frac = rank - lo
+        return samples[lo] * (1.0 - frac) + samples[hi] * frac
 
 
 @dataclass
@@ -104,7 +175,19 @@ class SessionResult:
     simulator, :class:`DataplaneJoinResult` on the dataplane); the convenience
     properties forward the common fields.  ``plan_cache_hit`` says whether the
     plan LRU served the compiled program; the ``*_us`` fields break the
-    submit's wall-clock into statistics / compile / execute phases."""
+    submit's wall-clock into statistics / compile / execute phases.
+
+    Coalescing provenance: ``coalesced`` is True when the request ran inside
+    a multi-query scheduler pass (its ``execute_us`` is then the *shared*
+    batch execute wall — the whole point is that k queries split it);
+    ``batch_size`` is that drain batch's size; ``deduplicated`` is True when
+    an identical concurrent submission executed and this request shares its
+    result object.  ``queue_us``/``e2e_us`` are nonzero only for
+    :meth:`JoinSession.submit_async` requests (time spent queued, and
+    enqueue-to-resolution wall).  ``caps_hits``/``caps_misses``/
+    ``caps_evictions`` forward the learned-caps counters of the run so cache
+    provenance (plan LRU vs learned caps vs executables) is unambiguous
+    per-result, not just session-wide."""
 
     result: Union[MPCJoinResult, DataplaneJoinResult]
     plan_key: Tuple
@@ -113,6 +196,11 @@ class SessionResult:
     compile_us: float
     execute_us: float
     total_us: float
+    coalesced: bool = False
+    batch_size: int = 1
+    deduplicated: bool = False
+    queue_us: float = 0.0
+    e2e_us: float = 0.0
 
     @property
     def count(self) -> int:
@@ -138,6 +226,45 @@ class SessionResult:
     def jit_cache_misses(self) -> int:
         return getattr(self.result, "jit_cache_misses", 0)
 
+    @property
+    def caps_hits(self) -> int:
+        return getattr(self.result, "caps_hits", 0)
+
+    @property
+    def caps_misses(self) -> int:
+        return getattr(self.result, "caps_misses", 0)
+
+    @property
+    def caps_evictions(self) -> int:
+        return getattr(self.result, "caps_evictions", 0)
+
+
+@dataclass
+class _Request:
+    """One queued (or inline) submission flowing through ``_execute_batch``."""
+
+    query: JoinQuery
+    lam: Optional[int] = None
+    stats: Optional[HeavyStats] = None
+    materialize: bool = True
+    h_subsets: Optional[Sequence[Sequence[Attr]]] = None
+    fuse_semijoin: Optional[bool] = None
+    batch: Optional[Dict] = None          # submit_batch's shared-table memos
+    future: Optional[Future] = None       # async submits resolve through this
+    t_enqueue: Optional[float] = None     # perf_counter at queue admission
+    # filled by _prepare:
+    executor: object = None
+    program: Optional[RoundProgram] = None
+    plan_key: Optional[Tuple] = None
+    plan_cache_hit: bool = False
+    stats_us: float = 0.0
+    compile_us: float = 0.0
+    error: Optional[BaseException] = None
+
+
+#: drainer shutdown sentinel (enqueued by :meth:`JoinSession.close`).
+_SHUTDOWN = object()
+
 
 class JoinSession:
     """A persistent join service over one executor: repeated ``submit`` calls
@@ -156,6 +283,15 @@ class JoinSession:
         plan_cache_size: LRU bound on cached compiled programs.
         seed: shared-randomness seed (scatter + routing hashes).
         fuse_semijoin: default fusion flag for submits that don't pass one.
+        max_queue: admission bound of the async submission queue — a full
+            queue rejects :meth:`submit_async` with :class:`AdmissionError`.
+        max_coalesce: most requests one drain batch may coalesce.
+        slo_target_us: per-query latency SLO; when set, every submit counts
+            into ``stats.slo_ok``/``stats.slo_violations`` (async submits
+            judged on queue-inclusive e2e latency).
+        async_autostart: start the drainer thread lazily on the first
+            :meth:`submit_async` (disable to unit-test admission control or
+            to drive the queue deterministically via :meth:`close`).
 
     A repeat submit of a cached query shape is the *warm path*: the plan LRU
     skips ``compile_plan``, and on the dataplane the executor's learned caps
@@ -163,7 +299,11 @@ class JoinSession:
     ``tests/test_service.py`` locks ``jit_cache_misses == 0`` and an empty
     ``retry_log`` on the second submit, including after an LRU
     eviction/readmission cycle (learned caps are executor-lifetime state,
-    keyed independently of the plan LRU)."""
+    keyed independently of the plan LRU).
+
+    Thread-safety: all executor access is serialized under one re-entrant
+    lock — concurrent collective executions deadlock, so multiplexing happens
+    at the bucket layer (coalesced dispatches), never with parallel runs."""
 
     def __init__(
         self,
@@ -173,19 +313,32 @@ class JoinSession:
         plan_cache_size: int = 64,
         seed: int = 0,
         fuse_semijoin: bool = False,
+        max_queue: int = 256,
+        max_coalesce: int = 32,
+        slo_target_us: Optional[float] = None,
+        async_autostart: bool = True,
     ):
         if backend not in ("dataplane", "simulator"):
             raise ValueError(f"unknown backend {backend!r}")
+        if max_coalesce < 1:
+            raise ValueError("max_coalesce must be >= 1")
         self.p = p
         self.backend = backend
         self.seed = seed
         self.fuse_semijoin = fuse_semijoin
         self.plan_cache_size = plan_cache_size
+        self.max_coalesce = max_coalesce
+        self.slo_target_us = slo_target_us
+        self.async_autostart = async_autostart
         self.executor: Optional[DataplaneExecutor] = None
         if backend == "dataplane":
             self.executor = executor if executor is not None else DataplaneExecutor()
         self._plans: "OrderedDict[Tuple, RoundProgram]" = OrderedDict()
         self.stats = ServiceStats()
+        self._lock = threading.RLock()
+        self._queue: "queue_mod.Queue" = queue_mod.Queue(maxsize=max_queue)
+        self._drainer: Optional[threading.Thread] = None
+        self._closed = False
 
     # -- single-query entry ---------------------------------------------------
 
@@ -215,74 +368,394 @@ class JoinSession:
             A :class:`SessionResult` wrapping the backend result with cache
             provenance and per-phase latency.
         """
-        t_start = time.perf_counter()
-        fuse = self.fuse_semijoin if fuse_semijoin is None else fuse_semijoin
-        if lam is None:
-            # only the λ default needs ρ — keep the LP solve off the
-            # explicit-λ hot path (steady-state submits must be dispatch-only)
-            if stats is not None:
-                lam = stats.lam
-            else:
-                rho_val = float(fractional_edge_cover(query.hypergraph)[0])
-                lam = heavy_parameter(self.p, rho_val)
-        batch = _batch or {}
+        req = _Request(
+            query=query, lam=lam, stats=stats, materialize=materialize,
+            h_subsets=h_subsets, fuse_semijoin=fuse_semijoin, batch=_batch,
+        )
+        out = self._execute_batch([req])[0]
+        if isinstance(out, BaseException):
+            raise out
+        return out
 
-        t0 = time.perf_counter()
-        if self.backend == "simulator":
-            sim = MPCSimulator(self.p, seed=self.seed)
-            executor: object = SimulatorExecutor(sim, seed=self.seed)
-            executor.place_inputs(query, scatter_cache=batch.get("scatter"))
-            if stats is None:
-                stats = distributed_stats(sim, query, lam)
-        else:
-            executor = self.executor
-            if stats is None:
-                stats = compute_stats(query, lam, unique_memo=batch.get("unique"))
-        stats_us = (time.perf_counter() - t0) * 1e6
+    # -- async / coalescing entry ---------------------------------------------
 
-        key = plan_cache_key(query, stats, self.p, h_subsets, fuse)
-        cached = self._plans.get(key)
-        compile_us = 0.0
-        if cached is not None:
-            self._plans.move_to_end(key)
-            program = cached.rebind(query)
-            self.stats.plan_hits += 1
-        else:
-            t0 = time.perf_counter()
-            program = compile_plan(
-                query, stats, self.p, h_subsets=h_subsets, fuse_semijoin=fuse
+    def submit_async(
+        self,
+        query: JoinQuery,
+        lam: Optional[int] = None,
+        stats: Optional[HeavyStats] = None,
+        materialize: bool = True,
+        h_subsets: Optional[Sequence[Sequence[Attr]]] = None,
+        fuse_semijoin: Optional[bool] = None,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> "Future[SessionResult]":
+        """Enqueue one query; a drainer coalesces concurrent requests.
+
+        Returns a :class:`concurrent.futures.Future` resolving to the same
+        :class:`SessionResult` a serial :meth:`submit` would produce (byte-
+        identical rows — coalescing changes scheduling, never results), with
+        ``queue_us``/``e2e_us`` filled in.
+
+        Admission control: the queue is bounded at ``max_queue``.  With
+        ``block=False`` (or when ``timeout`` elapses) a full queue raises
+        :class:`AdmissionError` immediately — the backpressure signal — and
+        increments ``stats.rejected``.
+
+        The drainer thread starts lazily on the first call (disable with
+        ``async_autostart=False``; :meth:`close` then drains inline)."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        req = _Request(
+            query=query, lam=lam, stats=stats, materialize=materialize,
+            h_subsets=h_subsets, fuse_semijoin=fuse_semijoin,
+            future=Future(), t_enqueue=time.perf_counter(),
+        )
+        try:
+            self._queue.put(req, block=block, timeout=timeout)
+        except queue_mod.Full:
+            self.stats.rejected += 1
+            raise AdmissionError(
+                f"submission queue full ({self._queue.maxsize} pending)"
+            ) from None
+        self.stats.async_submits += 1
+        if self.async_autostart:
+            self.start()
+        return req.future
+
+    def submit_coalesced(
+        self,
+        queries: Sequence[JoinQuery],
+        lam: Optional[int] = None,
+        materialize: bool = True,
+        fuse_semijoin: Optional[bool] = None,
+    ) -> List[SessionResult]:
+        """Answer several queries through ONE coalesced scheduler pass.
+
+        The synchronous twin of draining ``len(queries)`` concurrent
+        :meth:`submit_async` requests in one batch (and the deterministic
+        seam the tests use): same grouping by
+        :func:`~repro.mpc.program.coalesce_signature`, same identical-
+        submission dedup, same demux.  Results are in submission order and
+        byte-identical to one :meth:`submit` per query."""
+        share: Dict = {"scatter": {}, "unique": {}}
+        reqs = [
+            _Request(
+                query=q, lam=lam, materialize=materialize,
+                fuse_semijoin=fuse_semijoin, batch=share,
             )
-            compile_us = (time.perf_counter() - t0) * 1e6
-            # cache plan metadata only: the concrete relations are rebound on
-            # every hit, so pinning the first submitter's tuple data in the
-            # LRU would retain up to plan_cache_size tables for no reader
-            self._plans[key] = replace(program, query=None)
-            self.stats.plan_misses += 1
-            while len(self._plans) > self.plan_cache_size:
-                self._plans.popitem(last=False)
-                self.stats.plan_evictions += 1
+            for q in queries
+        ]
+        outs = self._execute_batch(reqs)
+        for out in outs:
+            if isinstance(out, BaseException):
+                raise out
+        return outs
 
-        t0 = time.perf_counter()
-        res = executor.run(program, materialize=materialize)
-        execute_us = (time.perf_counter() - t0) * 1e6
-        total_us = (time.perf_counter() - t_start) * 1e6
+    def start(self) -> None:
+        """Start the drainer thread (idempotent; ``submit_async`` autostarts
+        unless the session was built with ``async_autostart=False``)."""
+        if self._drainer is None or not self._drainer.is_alive():
+            self._drainer = threading.Thread(
+                target=self._drain_loop, name="join-session-drainer", daemon=True
+            )
+            self._drainer.start()
 
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting async submits and drain what's already queued.
+
+        With a live drainer the shutdown sentinel is enqueued and (when
+        ``wait``) joined; without one (``async_autostart=False`` sessions)
+        the queue is drained inline so every pending future still resolves."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._drainer is not None and self._drainer.is_alive():
+            self._queue.put(_SHUTDOWN)
+            if wait:
+                self._drainer.join()
+            return
+        # no drainer: resolve pending requests inline, in queue order
+        pending: List[_Request] = []
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue_mod.Empty:
+                break
+            if item is not _SHUTDOWN:
+                pending.append(item)
+        while pending:
+            batch, pending = pending[: self.max_coalesce], pending[self.max_coalesce:]
+            self._process(batch)
+
+    def __enter__(self) -> "JoinSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _drain_loop(self) -> None:
+        """Drainer: block on the queue, then coalesce everything already
+        waiting (up to ``max_coalesce``) into one batch.  Natural batching —
+        under light load batches are singletons and latency is a serial
+        submit's; under burst load the batch grows and the per-dispatch cost
+        amortizes across it."""
+        while True:
+            item = self._queue.get()
+            if item is _SHUTDOWN:
+                return
+            batch = [item]
+            stop = False
+            while len(batch) < self.max_coalesce:
+                try:
+                    nxt = self._queue.get_nowait()
+                except queue_mod.Empty:
+                    break
+                if nxt is _SHUTDOWN:
+                    stop = True
+                    break
+                batch.append(nxt)
+            self._process(batch)
+            if stop:
+                return
+
+    def _process(self, batch: List[_Request]) -> None:
+        """Execute one drain batch and resolve its futures (never raises —
+        a drainer must survive any single request's failure)."""
+        try:
+            outs = self._execute_batch(batch)
+        except BaseException as e:  # defensive: _execute_batch reports per-request
+            outs = [e] * len(batch)
+        for req, out in zip(batch, outs):
+            if req.future is None:
+                continue
+            if isinstance(out, BaseException):
+                req.future.set_exception(out)
+            else:
+                req.future.set_result(out)
+
+    # -- the shared execution path --------------------------------------------
+
+    def _prepare(self, req: _Request, share: Dict) -> None:
+        """Phase 1 of a submit: histogram, plan-cache lookup, compile on miss.
+
+        Fills the request in place; any failure lands in ``req.error`` so one
+        bad query never poisons the rest of a coalesced batch."""
+        try:
+            fuse = (
+                self.fuse_semijoin
+                if req.fuse_semijoin is None
+                else req.fuse_semijoin
+            )
+            lam, stats = req.lam, req.stats
+            if lam is None:
+                # only the λ default needs ρ — keep the LP solve off the
+                # explicit-λ hot path (steady-state submits must be
+                # dispatch-only)
+                if stats is not None:
+                    lam = stats.lam
+                else:
+                    rho_val = float(
+                        fractional_edge_cover(req.query.hypergraph)[0]
+                    )
+                    lam = heavy_parameter(self.p, rho_val)
+
+            t0 = time.perf_counter()
+            if self.backend == "simulator":
+                sim = MPCSimulator(self.p, seed=self.seed)
+                executor: object = SimulatorExecutor(sim, seed=self.seed)
+                executor.place_inputs(req.query, scatter_cache=share.get("scatter"))
+                if stats is None:
+                    stats = distributed_stats(sim, req.query, lam)
+            else:
+                executor = self.executor
+                if stats is None:
+                    stats = compute_stats(
+                        req.query, lam, unique_memo=share.get("unique")
+                    )
+            req.stats_us = (time.perf_counter() - t0) * 1e6
+
+            key = plan_cache_key(req.query, stats, self.p, req.h_subsets, fuse)
+            cached = self._plans.get(key)
+            if cached is not None:
+                self._plans.move_to_end(key)
+                req.program = cached.rebind(req.query)
+                self.stats.plan_hits += 1
+            else:
+                t0 = time.perf_counter()
+                req.program = compile_plan(
+                    req.query, stats, self.p,
+                    h_subsets=req.h_subsets, fuse_semijoin=fuse,
+                )
+                req.compile_us = (time.perf_counter() - t0) * 1e6
+                # cache plan metadata only: the concrete relations are rebound
+                # on every hit, so pinning the first submitter's tuple data in
+                # the LRU would retain up to plan_cache_size tables for no
+                # reader
+                self._plans[key] = replace(req.program, query=None)
+                self.stats.plan_misses += 1
+                while len(self._plans) > self.plan_cache_size:
+                    self._plans.popitem(last=False)
+                    self.stats.plan_evictions += 1
+            req.executor = executor
+            req.plan_key = key
+            req.plan_cache_hit = cached is not None
+        except BaseException as e:
+            req.error = e
+
+    def _execute_batch(
+        self, reqs: List[_Request]
+    ) -> List[Union[SessionResult, BaseException]]:
+        """Prepare, group, run, and demux one batch of requests.
+
+        Grouping (dataplane only; the simulator backend runs serially — each
+        query owns a metered simulator):
+
+          1. requests are grouped by ``(coalesce_signature(program),
+             materialize)`` — the bucket-compatibility rule: equal signatures
+             mean identical op sequences and matching stage-geometry
+             histograms, so the group shares one ``run_many`` scheduler pass;
+          2. within a group, requests with identical *executions* — equal
+             plan key AND the same bound table objects — deduplicate: one
+             representative runs, the duplicates share its result (the
+             ``deduped`` counter; results are read-only).
+
+        Scheduler counters (dispatches, jit, caps, retries) aggregate into
+        :attr:`stats` once per ``run_many`` call — they are batch-level, so
+        summing them per member would multi-count."""
+        with self._lock:
+            t_batch = time.perf_counter()
+            share = (
+                reqs[0].batch
+                if len(reqs) == 1 and reqs[0].batch is not None
+                else (reqs[0].batch or {"scatter": {}, "unique": {}})
+            )
+            for req in reqs:
+                self._prepare(req, req.batch if req.batch is not None else share)
+
+            live = [r for r in reqs if r.error is None]
+            outs: Dict[int, Union[SessionResult, BaseException]] = {}
+
+            if self.backend == "simulator" or self.executor is None:
+                for req in live:
+                    t0 = time.perf_counter()
+                    try:
+                        res = req.executor.run(
+                            req.program, materialize=req.materialize
+                        )
+                    except BaseException as e:
+                        req.error = e
+                        continue
+                    execute_us = (time.perf_counter() - t0) * 1e6
+                    self.stats.jit_hits += getattr(res, "jit_cache_hits", 0)
+                    self.stats.jit_misses += getattr(res, "jit_cache_misses", 0)
+                    self.stats.retries += getattr(res, "retries", 0)
+                    outs[id(req)] = self._wrap(
+                        req, res, execute_us, len(reqs), coalesced=False,
+                        deduplicated=False,
+                    )
+            else:
+                # group by bucket compatibility, preserving submission order
+                groups: "OrderedDict[Tuple, List[_Request]]" = OrderedDict()
+                for req in live:
+                    gkey = (coalesce_signature(req.program), req.materialize)
+                    groups.setdefault(gkey, []).append(req)
+                for members in groups.values():
+                    # identical-submission dedup: same plan key + same bound
+                    # table objects ⇒ same bytes out, so run once and share
+                    reps: List[_Request] = []
+                    assign: List[int] = []
+                    seen: Dict[Tuple, int] = {}
+                    for req in members:
+                        dk = (
+                            req.plan_key,
+                            tuple(id(r.data) for r in req.query.relations),
+                        )
+                        if dk in seen:
+                            assign.append(seen[dk])
+                            self.stats.deduped += 1
+                        else:
+                            seen[dk] = len(reps)
+                            assign.append(len(reps))
+                            reps.append(req)
+                    t0 = time.perf_counter()
+                    try:
+                        results, bstats = self.executor.run_many(
+                            [r.program for r in reps],
+                            materialize=members[0].materialize,
+                        )
+                    except BaseException as e:
+                        for req in members:
+                            req.error = e
+                        continue
+                    execute_us = (time.perf_counter() - t0) * 1e6
+                    self.stats.jit_hits += bstats.jit_cache_hits
+                    self.stats.jit_misses += bstats.jit_cache_misses
+                    self.stats.retries += bstats.retries
+                    self.stats.caps_hits += bstats.caps_hits
+                    self.stats.caps_misses += bstats.caps_misses
+                    self.stats.caps_evictions += bstats.caps_evictions
+                    coalesced = len(members) > 1
+                    for req, ri in zip(members, assign):
+                        outs[id(req)] = self._wrap(
+                            req, results[ri], execute_us, len(reqs),
+                            coalesced=coalesced,
+                            deduplicated=(req is not reps[ri]),
+                        )
+
+            if len(reqs) > 1:
+                self.stats.coalesced_batches += 1
+                self.stats.coalesced_queries += len(reqs)
+                self.stats.max_coalesced_batch = max(
+                    self.stats.max_coalesced_batch, len(reqs)
+                )
+            self.stats.cached_plans = len(self._plans)
+
+            t_done = time.perf_counter()
+            final: List[Union[SessionResult, BaseException]] = []
+            for req in reqs:
+                if req.error is not None:
+                    final.append(req.error)
+                    continue
+                out = outs[id(req)]
+                if req.t_enqueue is not None:
+                    out.queue_us = max(0.0, (t_batch - req.t_enqueue) * 1e6)
+                    out.e2e_us = (t_done - req.t_enqueue) * 1e6
+                    self.stats.e2e_us.append(out.e2e_us)
+                if self.slo_target_us is not None:
+                    lat = out.e2e_us if req.t_enqueue is not None else out.total_us
+                    if lat <= self.slo_target_us:
+                        self.stats.slo_ok += 1
+                    else:
+                        self.stats.slo_violations += 1
+                final.append(out)
+            return final
+
+    def _wrap(
+        self,
+        req: _Request,
+        res: Union[MPCJoinResult, DataplaneJoinResult],
+        execute_us: float,
+        batch_size: int,
+        coalesced: bool,
+        deduplicated: bool,
+    ) -> SessionResult:
+        total_us = req.stats_us + req.compile_us + execute_us
         self.stats.submits += 1
-        self.stats.cached_plans = len(self._plans)
-        self.stats.jit_hits += getattr(res, "jit_cache_hits", 0)
-        self.stats.jit_misses += getattr(res, "jit_cache_misses", 0)
-        self.stats.retries += getattr(res, "retries", 0)
-        (self.stats.warm_us if cached is not None else self.stats.cold_us).append(
+        (self.stats.warm_us if req.plan_cache_hit else self.stats.cold_us).append(
             total_us
         )
         return SessionResult(
             result=res,
-            plan_key=key,
-            plan_cache_hit=cached is not None,
-            stats_us=stats_us,
-            compile_us=compile_us,
+            plan_key=req.plan_key,
+            plan_cache_hit=req.plan_cache_hit,
+            stats_us=req.stats_us,
+            compile_us=req.compile_us,
             execute_us=execute_us,
             total_us=total_us,
+            coalesced=coalesced,
+            batch_size=batch_size,
+            deduplicated=deduplicated,
         )
 
     # -- batch entry ----------------------------------------------------------
@@ -294,7 +767,7 @@ class JoinSession:
         materialize: bool = True,
         fuse_semijoin: Optional[bool] = None,
     ) -> List[SessionResult]:
-        """Answer a batch of queries, sharing per-table work across the batch.
+        """Answer a batch of queries serially, sharing per-table work.
 
         Queries binding the same physical ``Relation.table`` share one device
         placement: on the simulator backend the first query's seeded scatter
@@ -303,7 +776,8 @@ class JoinSession:
         on the dataplane backend the histogram's per-(table, column)
         unique-count pass — the sort-dominated part of ``compute_stats`` — is
         computed once per table.  Results are identical to one
-        :meth:`submit` per query, in order.
+        :meth:`submit` per query, in order.  (For a *coalesced* batch — one
+        scheduler pass for the whole set — see :meth:`submit_coalesced`.)
 
         Returns: one :class:`SessionResult` per query, in submission order.
         """

@@ -34,6 +34,17 @@ def test_warm_stats_come_from_a_warm_run():
     assert warm.jit_cache_hits > 0
 
 
+def test_warm_breakdown_feeds_the_snapshot():
+    # the JSON snapshot publishes the warm run's per-phase/per-round latency
+    # maps (trend lines that localize a warm regression); they must be
+    # present and non-trivial on the warm stats object the bench reads
+    g, pat, lam = _tiny_case()
+    m = measure_case(g, pat, lam, warm_repeats=1)
+    warm = m["warm_stats"]
+    assert {"host_prep", "launch", "sync"} <= set(warm.phase_us)
+    assert warm.round_us and all(v >= 0.0 for v in warm.round_us.values())
+
+
 def test_cold_and_warm_agree_on_results():
     g, pat, lam = _tiny_case()
     m = measure_case(g, pat, lam, warm_repeats=1)

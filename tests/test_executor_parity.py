@@ -240,7 +240,7 @@ def test_output_only_overflow_scales_cap_out_not_routing():
 def _bare_scheduler(batch=True):
     """A DataplaneExecutor shell with only the scheduler state — no devices
     (the fake mesh tag just keys the executable-cache signatures)."""
-    from collections import OrderedDict
+    from collections import OrderedDict, defaultdict
 
     from repro.mpc.executors import ExecutableCache
 
@@ -250,8 +250,11 @@ def _bare_scheduler(batch=True):
     ex.mesh, ex.axis_name = "fake-mesh", "join"
     ex.compiled_cache = ExecutableCache()
     ex._retries, ex._retry_log = 0, []
+    ex._qi_retries, ex._qi_retry_log = defaultdict(int), defaultdict(list)
     ex._dispatches, ex._jit_hits, ex._jit_misses = 0, 0, 0
     ex._bucket_log, ex._learned_caps = {}, OrderedDict()
+    ex._caps_hits, ex._caps_misses, ex._caps_evictions = 0, 0, 0
+    ex.caps_hits, ex.caps_misses, ex.caps_evictions = 0, 0, 0
     ex._phase_us, ex._round_us = {}, {}
     return ex
 
@@ -260,8 +263,9 @@ class _FakeFn:
     """Stands in for a jitted primitive.  Like a real compiled executable its
     output is a pure function of its call args (the scheduler caches by
     signature, so a bucket may execute an executable compiled for an earlier
-    same-signature bucket): each arg is (trip, attempt) for one stage and the
-    overflow tensor trips that stage's channel on attempt 0."""
+    same-signature bucket): each arg is (trip, retries) for one stage and the
+    overflow tensor trips that stage's channel on the first run only (a real
+    retry runs at grown caps / fresh salts, which is what clears the trip)."""
 
     def lower(self, *args):
         return self
@@ -272,16 +276,16 @@ class _FakeFn:
     @staticmethod
     def _impl(*args):
         ovf = np.zeros((len(args), 1, 2), np.int64)
-        for j, (trip, attempt) in enumerate(args):
-            if attempt == 0 and trip:
+        for j, (trip, retries) in enumerate(args):
+            if retries == 0 and trip:
                 ovf[j, 0, 0 if trip == "slot" else 1] = 1
         return ovf
 
 
 def _item(i, caps, trip=None):
-    """trip: None | "slot" | "out" — which channel overflows on attempt 0."""
+    """trip: None | "slot" | "out" — which channel overflows on the first run."""
     return _WorkItem(
-        state=SimpleNamespace(skey=("H", i)),
+        state=SimpleNamespace(skey=("H", i), qi=0),
         key=("k",),
         caps=dict(caps),
         payload={"i": i, "trip": trip},
@@ -292,7 +296,7 @@ def _item(i, caps, trip=None):
 def _fake_dispatch(log):
     def dispatch(bucket):
         log.append([(it.payload["i"], dict(it.caps), it.attempt) for it in bucket])
-        args = tuple((it.payload["trip"] or "", it.attempt) for it in bucket)
+        args = tuple((it.payload["trip"] or "", it.retries) for it in bucket)
 
         def post(outs):
             return (lambda: [it.payload["i"] for it in bucket]), outs
@@ -303,17 +307,18 @@ def _fake_dispatch(log):
 
 
 def test_scheduler_doubles_only_the_tripped_channel():
-    """Per-channel retry: an output overflow doubles only 'out', a slot
-    overflow only 'slot' — the other channel's buffers stay untouched."""
-    for trip, doubled in (("out", {"slot": 16, "out": 128}),
-                          ("slot", {"slot": 32, "out": 64})):
+    """Per-channel retry: an output overflow doubles only 'out' and keeps the
+    attempt-0 salts (row order must not depend on capacity history); a slot
+    overflow doubles only 'slot' and advances to fresh attempt salts."""
+    for trip, doubled, attempt in (("out", {"slot": 16, "out": 128}, 0),
+                                   ("slot", {"slot": 32, "out": 64}, 1)):
         ex = _bare_scheduler()
         log = []
         items = [_item(0, {"slot": 16, "out": 64}, trip=trip)]
         out = ex._run_buckets("rnd", items, _fake_dispatch(log))
         assert out[0].result == 0
-        assert log[0][0][1] == {"slot": 16, "out": 64}
-        assert log[1][0][1] == doubled, (trip, log)
+        assert log[0][0] == (0, {"slot": 16, "out": 64}, 0)
+        assert log[1][0] == (0, doubled, attempt), (trip, log)
         assert ex._retry_log == [(("H", 0), "rnd", trip)]
         assert ex._retries == 1
 
@@ -337,11 +342,12 @@ def test_scheduler_mixed_channel_overflow_in_one_bucket():
         (2, {"slot": 16, "out": 64}, 0),
     ]
     # retry round: only the two overflowed items, each with its own channel
-    # doubled — and (caps now differing) in separate buckets
+    # doubled — and (caps now differing) in separate buckets; the slot item
+    # re-salts (attempt 1) while the out item keeps its attempt-0 salts
     retried = sorted((b[0] for b in log[1:]), key=lambda t: t[0])
     assert retried == [
         (0, {"slot": 32, "out": 64}, 1),
-        (1, {"slot": 16, "out": 128}, 1),
+        (1, {"slot": 16, "out": 128}, 0),
     ]
     assert ex._retry_log == [
         (("H", 0), "rnd", "slot"),

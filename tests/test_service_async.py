@@ -1,0 +1,279 @@
+"""Cross-query coalescing: the async submission queue and run_many scheduler.
+
+The acceptance bar of the coalescing layer (docs/design/09-service.md):
+
+  * coalesced execution is a pure *scheduling* change — results (rows, order,
+    per-H counts) are byte-identical to serial ``submit()``, both when
+    identical submissions dedup onto one execution and when distinct-data
+    queries stack into fused dispatches;
+  * ``submit_async`` futures resolve to the same results with queue-inclusive
+    latency filled in; a full bounded queue rejects with ``AdmissionError``
+    (admission control) instead of queueing unboundedly;
+  * plan LRU + learned caps stay correct under interleaved multi-query
+    submission, including an eviction mid-stream (the satellite-3 scenario);
+  * cache provenance is unambiguous: the learned-caps counters are metered
+    separately from the plan LRU and the executable cache, per-result and
+    session-wide.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.query import JoinQuery, Relation, random_query, reference_join
+from repro.core.taxonomy import compute_stats
+from repro.mpc import (
+    AdmissionError,
+    DataplaneExecutor,
+    JoinSession,
+    coalesce_signature,
+    programs_coalescible,
+)
+from repro.mpc.program import compile_plan
+
+
+def rows_key(rows):
+    rows = getattr(rows, "data", rows)  # reference_join returns a Relation
+    return sorted(map(tuple, np.asarray(rows).tolist()))
+
+
+def skew_triangle():
+    return random_query(
+        np.random.default_rng(2), "clique", 3, tuples_per_rel=120, dom_size=24,
+        skew=2.0,
+    )
+
+
+def perm_query(seed: int, n: int = 60) -> JoinQuery:
+    """(A,B) ⋈ (B,C) over permutation graphs: no heavy values, so two seeds
+    produce different data behind an identical plan cache key."""
+    rng = np.random.default_rng(seed)
+    ab = np.stack([np.arange(n), rng.permutation(n)], axis=1)
+    bc = np.stack([np.arange(n), rng.permutation(n)], axis=1)
+    return JoinQuery.make(
+        [Relation.make(("A", "B"), ab), Relation.make(("B", "C"), bc)]
+    )
+
+
+def path_query(seed: int) -> JoinQuery:
+    return random_query(
+        np.random.default_rng(seed), "line", 3, tuples_per_rel=90, dom_size=18,
+        skew=1.2,
+    )
+
+
+def serial_reference(queries, lam):
+    """Isolated serial submits, one fresh session — the ground truth."""
+    s = JoinSession(p=8, backend="dataplane")
+    return [s.submit(q, lam=lam) for q in queries]
+
+
+# ---------------------------------------------------------------------------
+# Byte identity: coalesced == serial
+# ---------------------------------------------------------------------------
+
+
+def test_coalesced_mixed_shapes_byte_identical_to_serial():
+    # different shapes land in different coalesce groups but share one drain
+    # batch; every result must be byte-identical to a serial submit — cold
+    # (first pass compiles) AND warm (stacked signatures cached)
+    queries = [skew_triangle(), perm_query(3), path_query(5), perm_query(4)]
+    serial = serial_reference(queries, lam=4)
+    session = JoinSession(p=8, backend="dataplane")
+    for _ in range(2):  # cold pass, then warm pass
+        out = session.submit_coalesced(queries, lam=4)
+        for r, s in zip(out, serial):
+            assert r.count == s.count
+            assert dict(r.per_h_counts) == dict(s.per_h_counts)
+            assert np.array_equal(r.rows, s.rows)  # bytes AND order
+    assert session.stats.coalesced_batches == 2
+    assert session.stats.max_coalesced_batch == len(queries)
+
+
+def test_stacked_distinct_data_byte_identical():
+    # same plan key, different tables: dedup cannot apply, so these exercise
+    # the stage-stacking path (one fused dispatch serves all four queries)
+    queries = [perm_query(s) for s in (10, 11, 12, 13)]
+    serial = serial_reference(queries, lam=4)
+    session = JoinSession(p=8, backend="dataplane")
+    out = session.submit_coalesced(queries, lam=4)
+    assert session.stats.deduped == 0
+    for r, s, q in zip(out, serial, queries):
+        assert np.array_equal(r.rows, s.rows)
+        assert rows_key(r.rows) == rows_key(reference_join(q))
+        assert r.coalesced and r.batch_size == len(queries)
+
+
+def test_identical_submissions_share_one_execution():
+    q = perm_query(21)
+    oracle = rows_key(reference_join(q))
+    session = JoinSession(p=8, backend="dataplane")
+    out = session.submit_coalesced([q, q, q, q], lam=4)
+    assert session.stats.deduped == 3
+    assert [r.deduplicated for r in out] == [False, True, True, True]
+    for r in out:
+        assert rows_key(r.rows) == oracle
+        assert r.coalesced
+    # dedup shares the representative's result object — same bytes for free
+    assert out[1].result is out[0].result
+
+
+# ---------------------------------------------------------------------------
+# Async queue: futures, admission control, drainer lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_submit_async_futures_match_serial():
+    queries = [perm_query(30), skew_triangle(), perm_query(31), perm_query(30)]
+    serial = serial_reference(queries, lam=4)
+    session = JoinSession(p=8, backend="dataplane")
+    try:
+        futs = [session.submit_async(q, lam=4) for q in queries]
+        out = [f.result(timeout=120) for f in futs]
+        for r, s in zip(out, serial):
+            assert np.array_equal(r.rows, s.rows)
+            assert r.e2e_us > 0.0 and r.e2e_us >= r.queue_us
+        assert session.stats.async_submits == len(queries)
+        assert len(session.stats.e2e_us) == len(queries)
+    finally:
+        session.close()
+    # closed session refuses new async work
+    with pytest.raises(RuntimeError):
+        session.submit_async(queries[0], lam=4)
+
+
+def test_admission_control_bounded_queue():
+    session = JoinSession(
+        p=8, backend="dataplane", max_queue=1, async_autostart=False
+    )
+    q = perm_query(40)
+    fut = session.submit_async(q, lam=4, block=False)
+    with pytest.raises(AdmissionError):
+        session.submit_async(q, lam=4, block=False)
+    assert session.stats.rejected == 1
+    assert session.stats.async_submits == 1
+    # close() on a drainer-less session drains inline: the admitted request
+    # still resolves (backpressure rejects, it never drops admitted work)
+    session.close()
+    r = fut.result(timeout=0)
+    assert rows_key(r.rows) == rows_key(reference_join(q))
+
+
+def test_drainer_survives_a_failing_request():
+    session = JoinSession(p=8, backend="dataplane", async_autostart=False)
+    good = perm_query(41)
+    # lam=0 blows up in plan preparation — a per-request failure that must
+    # resolve its own future exceptionally without poisoning the batch
+    f_bad = session.submit_async(perm_query(42), lam=0)
+    f_good = session.submit_async(good, lam=4)
+    session.close()  # inline drain: one batch with both requests
+    with pytest.raises(BaseException):
+        f_bad.result(timeout=0)
+    r = f_good.result(timeout=0)
+    assert rows_key(r.rows) == rows_key(reference_join(good))
+
+
+# ---------------------------------------------------------------------------
+# Interleaved multi-query submission: plan LRU + learned caps (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+def test_interleaved_datasets_with_eviction_mid_stream():
+    # two datasets alternate on ONE plan key while a third shape evicts that
+    # plan mid-stream (plan_cache_size=1); every result — serial interleaved
+    # and coalesced — must match its isolated serial submit
+    a, b, tri = perm_query(50), perm_query(51), skew_triangle()
+    ref = {id(q): r for q, r in zip(
+        (a, b, tri), serial_reference([a, b, tri], lam=4)
+    )}
+    session = JoinSession(p=8, backend="dataplane", plan_cache_size=1)
+    stream = [a, b, tri, a, b, tri, b, a]
+    for q in stream:
+        r = session.submit(q, lam=4)
+        assert np.array_equal(r.rows, ref[id(q)].rows), "interleaved serial"
+    assert session.stats.plan_evictions > 0
+    # now the same alternation through one coalesced batch (the plan for a/b
+    # was just evicted by tri — the batch recompiles and still demuxes right)
+    out = session.submit_coalesced([a, b, a, tri, b], lam=4)
+    for r, q in zip(out, [a, b, a, tri, b]):
+        assert np.array_equal(r.rows, ref[id(q)].rows), "coalesced after evict"
+    # learned caps are executor-lifetime: the eviction churn above must not
+    # have cost retries
+    assert session.stats.retries == 0
+
+
+# ---------------------------------------------------------------------------
+# Cache provenance: learned-caps counters split from the plan LRU
+# ---------------------------------------------------------------------------
+
+
+def test_caps_counters_are_distinct_from_plan_counters():
+    session = JoinSession(p=8, backend="dataplane")
+    q = skew_triangle()
+    cold = session.submit(q, lam=4)
+    warm = session.submit(q, lam=4)
+    # cold run discovers capacities (misses), warm run reuses them (hits)
+    assert cold.caps_misses > 0 and cold.caps_hits == 0
+    assert warm.caps_hits > 0 and warm.caps_misses == 0
+    # session-wide mirrors, accumulated separately from the plan LRU
+    assert session.stats.caps_misses == cold.caps_misses
+    assert session.stats.caps_hits == warm.caps_hits
+    assert (session.stats.plan_hits, session.stats.plan_misses) == (1, 1)
+    # plan-LRU churn does not touch the caps counters
+    session.clear_plans()
+    before = (session.stats.caps_hits, session.stats.caps_misses,
+              session.stats.caps_evictions)
+    session.submit(q, lam=4)  # plan miss, caps all hit
+    assert session.stats.plan_misses == 2
+    assert session.stats.caps_misses == before[1]
+    assert session.stats.caps_hits > before[0]
+
+
+# ---------------------------------------------------------------------------
+# Coalescibility predicate + executor-level validation
+# ---------------------------------------------------------------------------
+
+
+def test_coalesce_signature_groups_same_shape_programs():
+    a, b = perm_query(60), perm_query(61)
+    tri = skew_triangle()
+    pa = compile_plan(a, compute_stats(a, lam=4), 8)
+    pb = compile_plan(b, compute_stats(b, lam=4), 8)
+    pt = compile_plan(tri, compute_stats(tri, lam=4), 8)
+    assert coalesce_signature(pa) == coalesce_signature(pb)
+    assert programs_coalescible(pa, pb)
+    assert not programs_coalescible(pa, pt)
+
+
+def test_run_many_rejects_mismatched_op_sequences():
+    # fused vs unfused plans of one query: same buckets, different op list —
+    # the executor must refuse to stack them rather than misinterpret ops
+    tri = skew_triangle()
+    st = compute_stats(tri, lam=4)
+    plain = compile_plan(tri, st, 8)
+    fused = compile_plan(tri, st, 8, fuse_semijoin=True)
+    assert plain.ops != fused.ops  # precondition of the rejection
+    ex = DataplaneExecutor()
+    with pytest.raises(ValueError, match="coalescible"):
+        ex.run_many([plain, fused])
+
+
+# ---------------------------------------------------------------------------
+# SLO + latency percentiles
+# ---------------------------------------------------------------------------
+
+
+def test_slo_counters_and_percentiles():
+    session = JoinSession(p=8, backend="dataplane", slo_target_us=1e12)
+    q = perm_query(70)
+    session.submit(q, lam=4)
+    session.submit(q, lam=4)
+    assert session.stats.slo_ok == 2 and session.stats.slo_violations == 0
+    session.slo_target_us = 0.0  # nothing is that fast
+    session.submit(q, lam=4)
+    assert session.stats.slo_violations == 1
+    p50 = session.stats.percentile(50, window="warm")
+    p99 = session.stats.percentile(99, window="warm")
+    assert 0.0 < p50 <= p99
+    assert session.stats.percentile(50, window="e2e") == 0.0  # no async yet
+    with pytest.raises(ValueError):
+        session.stats.percentile(50, window="nope")
