@@ -322,6 +322,68 @@ def run(report):
         }
     )
 
+    # -- degraded-mode throughput under injected dispatch failures -----------
+    # Seeded FaultPlan injects dispatch exceptions at 1% / 5% of dispatch
+    # events; failed submits surface as typed JoinServiceErrors and quarantine
+    # their plan + learned-caps entries (docs/design/10-robustness.md).  The
+    # figures: closed-loop qps of the *surviving* queries while the plan is
+    # live (degraded-mode throughput carries the qps gate), plus the latency
+    # of the first clean submit after the plan drains (recovery cost: re-plan
+    # + count-pass re-derivation, zero overflow retries).
+    from repro.mpc.faults import FaultPlan, FaultRule, JoinServiceError
+
+    for rate in (0.01, 0.05):
+        label = f"faults-{int(rate * 100)}pct"
+        session = JoinSession(p=8, backend="dataplane")
+        for _, q, lam in shapes:                    # clean warm-up sweep
+            session.submit(q, lam=lam, materialize=False)
+        session.fault_plan = FaultPlan(
+            [FaultRule(site="dispatch", rate=rate)], seed=20260808
+        )
+        ok = failed = 0
+        t0 = time.perf_counter()
+        for _ in range(WAVES):
+            for _, q, lam in shapes:
+                try:
+                    session.submit(q, lam=lam, materialize=False)
+                    ok += 1
+                except JoinServiceError:
+                    failed += 1
+        wall = time.perf_counter() - t0
+        qps_fault = ok / wall if wall else 0.0
+        injected = session.fault_plan.total_injected
+        session.fault_plan = None                   # plan drained: recover
+        t0 = time.perf_counter()
+        rec = session.submit(shapes[0][1], lam=shapes[0][2], materialize=False)
+        recovery_us = (time.perf_counter() - t0) * 1e6
+        assert rec.retries == 0, rec.retries        # quarantine left no debris
+        session.close()
+        report(
+            f"service/{label}", wall * 1e6 / max(ok, 1),
+            f"rate={rate:.0%} survivors={ok} failed={failed} "
+            f"injected={injected} qps_degraded={qps_fault:.1f} "
+            f"recovery_us={recovery_us:.0f} "
+            f"plans_quarantined={session.stats.quarantined_plans}",
+        )
+        records.append(
+            {
+                "case": label,
+                "lam": None,
+                "count": None,
+                "fault_rate": rate,
+                "queries": ok + failed,
+                "survivors": ok,
+                "failed": failed,
+                "injected": int(injected),
+                "dataplane_cold_us": None,
+                "dataplane_warm_us": round(wall * 1e6 / max(ok, 1), 1),
+                "dataplane_retries": 0,
+                "qps_warm": round(qps_fault, 2),
+                "recovery_us": round(recovery_us, 1),
+                "plans_quarantined": int(session.stats.quarantined_plans),
+            }
+        )
+
     snapshot = {
         "bench": "service",
         "p_sim": 8,

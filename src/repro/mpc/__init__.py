@@ -12,6 +12,19 @@ round-program IR; ``executors`` provides the pluggable backends
 """
 
 from .simulator import MPCSimulator, HashFamily
+from .faults import (
+    DeadlineExceededError,
+    DegradedSessionError,
+    FaultPlan,
+    FaultRule,
+    InjectedCompileError,
+    InjectedDispatchError,
+    InjectedDrainerError,
+    InjectedFault,
+    JoinServiceError,
+    QueryFailedError,
+    RetryExhaustedError,
+)
 from .program import (
     BroadcastSizes,
     GridRoute,
@@ -20,6 +33,7 @@ from .program import (
     RoundOp,
     RoundProgram,
     RouteResidual,
+    RunConfig,
     Scatter,
     SemiJoin,
     coalesce_signature,

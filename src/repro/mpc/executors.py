@@ -43,6 +43,7 @@ warnings.filterwarnings(
 
 from ..core.query import Attr, JoinQuery, Relation, reference_join
 from ..core.taxonomy import heavy_masks, residual_relations
+from .faults import DeadlineExceededError, RetryExhaustedError
 from .hypercube import route_hypercube
 from .program import (
     BroadcastSizes,
@@ -53,6 +54,7 @@ from .program import (
     RoundOp,
     RoundProgram,
     RouteResidual,
+    RunConfig,
     Scatter,
     SemiJoin,
     StageGeometry,
@@ -823,6 +825,7 @@ class BatchRunStats:
     caps_hits: int = 0
     caps_misses: int = 0
     caps_evictions: int = 0
+    caps_quarantined: int = 0
     bucket_stage_counts: Dict[str, List[int]] = field(default_factory=dict)
     phase_us: Dict[str, float] = field(default_factory=dict)
     round_us: Dict[str, float] = field(default_factory=dict)
@@ -956,6 +959,21 @@ class DataplaneExecutor:
     #: service processes churning through many distinct query shapes.
     _LEARNED_CAPS_CAPACITY = 1 << 16
 
+    # Robustness state, defaulted at class level so scheduler-only harnesses
+    # (tests building the executor via ``__new__``) inherit the fault-free /
+    # no-deadline behavior without setting every attribute:
+    #: executor-default :class:`~repro.mpc.faults.FaultPlan` (None = inject
+    #: nothing); a per-run ``RunConfig.fault_plan`` overrides it.
+    fault_plan = None
+    #: lifetime count of learned-caps entries quarantined after faults.
+    caps_quarantined = 0
+    _deadline: Optional[float] = None       # absolute monotonic budget, per run
+    _fault_plan_run = None                  # plan resolved for the active run
+    _touched_caps: Optional[set] = None     # learned-caps keys read/written
+    _tainted_caps: Optional[set] = None     # keys that saw injected overflow
+    _caps_quarantined = 0                   # per-run quarantine count
+    _run_fps: Tuple[str, ...] = ()          # per-program data fingerprints
+
     def __init__(
         self,
         mesh=None,
@@ -965,6 +983,7 @@ class DataplaneExecutor:
         batch_stages: bool = True,
         compiled_cache: Optional[ExecutableCache] = None,
         exact_caps: bool = True,
+        fault_plan=None,
     ):
         """Args: ``mesh`` — JAX device mesh (default: one axis over all
         devices); ``slack`` — initial capacity headroom multiplier;
@@ -974,7 +993,9 @@ class DataplaneExecutor:
         process-wide :data:`EXECUTABLE_CACHE`); ``exact_caps`` — size
         GridRoute/LocalJoin buffers with a collective-free counting pass
         (count-then-emit) instead of heuristic estimates + overflow retry
-        (``False`` restores the estimate-based sizing)."""
+        (``False`` restores the estimate-based sizing); ``fault_plan`` —
+        default :class:`~repro.mpc.faults.FaultPlan` consulted at every
+        injection site (None = no injection)."""
         import jax
 
         if mesh is None:
@@ -999,8 +1020,11 @@ class DataplaneExecutor:
         #: their own pow2 fanout.
         self.fanout_merge_ratio = 2
         #: capacities learned from previous runs' overflow retries, keyed by
-        #: (round, group, static key): a repeat run starts each work item at
-        #: its last successful caps, so steady-state runs retry zero times.
+        #: (round, group, static key, data fingerprint): a repeat run of the
+        #: *same data* starts each work item at its last successful caps, so
+        #: steady-state runs retry zero times.  The fingerprint keeps
+        #: same-shaped queries over different tables from inheriting caps
+        #: that their data may exceed (see `_program_fingerprint`).
         #: Purely a function of earlier runs' outcomes (identical under
         #: batched and unbatched scheduling), hence parity-safe.  Executor-
         #: lifetime state with an LRU bound (`_LEARNED_CAPS_CAPACITY`) so a
@@ -1020,6 +1044,8 @@ class DataplaneExecutor:
         #: retries by construction, and cold runs stop paying for oversized
         #: heuristic buffers.
         self.exact_caps = exact_caps
+        self.fault_plan = fault_plan
+        self.caps_quarantined = 0
         self._phase_us: Dict[str, float] = {}
         self._round_us: Dict[str, float] = {}
 
@@ -1041,12 +1067,20 @@ class DataplaneExecutor:
 
     # -- public entry ---------------------------------------------------------
 
-    def run(self, program: RoundProgram, materialize: bool = True) -> DataplaneJoinResult:
-        results, _ = self.run_many([program], materialize=materialize)
+    def run(
+        self,
+        program: RoundProgram,
+        materialize: bool = True,
+        config: Optional[RunConfig] = None,
+    ) -> DataplaneJoinResult:
+        results, _ = self.run_many([program], materialize=materialize, config=config)
         return results[0]
 
     def run_many(
-        self, programs: List[RoundProgram], materialize: bool = True
+        self,
+        programs: List[RoundProgram],
+        materialize: bool = True,
+        config: Optional[RunConfig] = None,
     ) -> Tuple[List[DataplaneJoinResult], BatchRunStats]:
         """Run several compiled programs through ONE pass of the scheduler.
 
@@ -1068,7 +1102,17 @@ class DataplaneExecutor:
 
         Returns ``(results, batch)`` where ``batch`` carries the shared
         scheduler counters exactly once (each result also carries them,
-        documented as batch-level)."""
+        documented as batch-level).
+
+        ``config`` (a :class:`~repro.mpc.program.RunConfig`) adds the per-run
+        robustness knobs: a monotonic-clock ``deadline`` enforced between
+        dispatches (:class:`~repro.mpc.faults.DeadlineExceededError`) and a
+        per-run ``fault_plan`` override.  On ANY failure the run's touched
+        learned-caps entries are quarantined (dropped from the store) before
+        the exception propagates, so a faulted attempt cannot poison the
+        zero-retry steady state of later clean runs."""
+        if config is not None:
+            materialize = config.materialize
         if not programs:
             return [], BatchRunStats(queries=0)
         ops = programs[0].ops
@@ -1090,25 +1134,48 @@ class DataplaneExecutor:
         self._caps_hits = 0
         self._caps_misses = 0
         self._caps_evictions = 0
+        self._caps_quarantined = 0
         self._bucket_log: Dict[str, List[int]] = {}
         self._phase_us = {"host_prep": 0.0, "compile": 0.0, "launch": 0.0, "sync": 0.0}
         self._round_us = {}
+        self._deadline = config.deadline if config is not None else None
+        self._fault_plan_run = (
+            config.fault_plan if config is not None and config.fault_plan is not None
+            else self.fault_plan
+        )
+        self._touched_caps = set()
+        self._tainted_caps = set()
+        self._run_fps = tuple(self._program_fingerprint(p) for p in programs)
         states = [
             _StageState(stage=st, skey=(st.hkey, st.ekey), program=prog, qi=qi)
             for qi, prog in enumerate(programs)
             for st in prog.stages
         ]
 
-        for op in ops:
-            try:
-                lower = getattr(self, self._LOWERING[type(op)])
-            except KeyError:
-                raise DataplaneUnsupported(
-                    f"op {op!r} has no dataplane lowering rule"
-                ) from None
-            live = [state for state in states if not state.empty]
-            if live:
-                lower(programs[0], live, op)
+        try:
+            for op in ops:
+                try:
+                    lower = getattr(self, self._LOWERING[type(op)])
+                except KeyError:
+                    raise DataplaneUnsupported(
+                        f"op {op!r} has no dataplane lowering rule"
+                    ) from None
+                live = [state for state in states if not state.empty]
+                if live:
+                    lower(programs[0], live, op)
+        except BaseException:
+            # cache quarantine: a failed attempt may have written (or left
+            # half-doubled) learned caps anywhere it ran — drop every entry
+            # this run touched so the next clean run re-derives exact caps
+            # from scratch instead of inheriting fault-inflated buffers.
+            self._quarantine_touched()
+            raise
+        finally:
+            self._deadline = None
+            self._fault_plan_run = None
+            self._touched_caps = None
+            self._tainted_caps = None
+            self._run_fps = ()
 
         batch = BatchRunStats(
             queries=len(programs),
@@ -1120,6 +1187,7 @@ class DataplaneExecutor:
             caps_hits=self._caps_hits,
             caps_misses=self._caps_misses,
             caps_evictions=self._caps_evictions,
+            caps_quarantined=self._caps_quarantined,
             bucket_stage_counts={k: list(v) for k, v in self._bucket_log.items()},
             phase_us=dict(self._phase_us),
             round_us=dict(self._round_us),
@@ -1166,6 +1234,58 @@ class DataplaneExecutor:
                 round_us=dict(batch.round_us),
             ))
         return results, batch
+
+    # -- robustness hooks ------------------------------------------------------
+
+    def _check_deadline(self, round_name: str) -> None:
+        """Raise :class:`DeadlineExceededError` once the run's monotonic
+        budget is spent.  Called only *between* dispatches — a collective in
+        flight is never abandoned mid-rendezvous — so the overshoot is
+        bounded by one bucket dispatch."""
+        dl = self._deadline
+        if dl is not None and time.monotonic() > dl:
+            raise DeadlineExceededError(
+                f"deadline exceeded before op round {round_name!r} dispatch",
+                op_round=round_name,
+                deadline_s=dl,
+            )
+
+    def _quarantine_touched(self) -> None:
+        """Drop every learned-caps entry the active run touched (failed-run
+        cache quarantine)."""
+        for k in self._touched_caps or ():
+            if self._learned_caps.pop(k, None) is not None:
+                self._caps_quarantined += 1
+                self.caps_quarantined += 1
+
+    @staticmethod
+    def _program_fingerprint(program) -> str:
+        """Content digest of a program's bound input tables.
+
+        The learned-caps store keys on this in addition to the stage's
+        structural key: exact caps learned from one dataset are only
+        guaranteed sufficient for *that* dataset.  Two same-shaped queries
+        over different tables share plans and executables, but if the second
+        inherited the first's slot caps it would skip the count pass, trip a
+        real overflow, and re-salt — reordering its rows relative to an
+        isolated run.  Keying on content confines the count-skip fast path
+        to true resubmissions, which is the steady state it exists for."""
+        h = hashlib.blake2b(digest_size=8)
+        for rel in program.query.relations:
+            h.update(repr(tuple(rel.scheme)).encode())
+            d = np.ascontiguousarray(rel.data)
+            h.update(str(d.dtype).encode())
+            h.update(repr(d.shape).encode())
+            h.update(d.tobytes())
+        return h.hexdigest()
+
+    def _caps_key(self, round_name: str, it) -> Tuple:
+        """Learned-caps store key for a work item: structural slot plus the
+        owning program's data fingerprint (empty for scheduler-only
+        harnesses that never ran ``run_many``)."""
+        fps = self._run_fps
+        fp = fps[it.state.qi] if it.state.qi < len(fps) else None
+        return (round_name, it.group, it.key, fp)
 
     # -- stage-batched scheduler ----------------------------------------------
 
@@ -1244,6 +1364,8 @@ class DataplaneExecutor:
         unbatched schedule, same code path."""
         if not items:
             return items
+        self._check_deadline(round_name)
+        fp = self._fault_plan_run
         t_round = time.perf_counter()
         phase = self._phase_us
 
@@ -1256,9 +1378,12 @@ class DataplaneExecutor:
         # compiled — so that run pays one compile and stores the converged
         # caps; from then on signatures, caps, and retry counts are stable.
         for it in items:
-            learned = self._learned_caps.get((round_name, it.group, it.key))
+            k = self._caps_key(round_name, it)
+            learned = self._learned_caps.get(k)
+            if self._touched_caps is not None and it.caps:
+                self._touched_caps.add(k)
             if learned:
-                self._learned_caps.move_to_end((round_name, it.group, it.key))
+                self._learned_caps.move_to_end(k)
                 for ch in it.caps:
                     it.caps[ch] = max(it.caps[ch], learned[ch])
             # meter the learned-caps store separately from the plan LRU /
@@ -1291,6 +1416,7 @@ class DataplaneExecutor:
                     g.caps[ch] = m
         pending = list(items)
         while pending:
+            self._check_deadline(round_name)
             buckets: Dict[Tuple, List[_WorkItem]] = {}
             for it in pending:
                 bkey = (it.key, tuple(sorted(it.caps.items())))
@@ -1341,6 +1467,8 @@ class DataplaneExecutor:
 
                 def compile_one(item):
                     sig, (fn, args) = item
+                    if fp is not None:
+                        fp.at_compile(round_name)
                     return sig, fn.lower(*args).compile()
 
                 todo = list(to_compile.items())
@@ -1364,6 +1492,9 @@ class DataplaneExecutor:
             t0 = time.perf_counter()
             launched = []
             for bucket, sig, args, post in prepared:
+                self._check_deadline(round_name)
+                if fp is not None:
+                    fp.at_dispatch(round_name)
                 launched.append((bucket, *post(executables[sig](*args))))
             phase["launch"] = phase.get("launch", 0.0) + (
                 time.perf_counter() - t0
@@ -1383,6 +1514,20 @@ class DataplaneExecutor:
                         kinds.add("slot")
                     if int(tot[1]):
                         kinds.add("out")
+                    if fp is not None:
+                        # injected overflow: forced channels read exactly like
+                        # real trips (doubling, re-salting, retry accounting),
+                        # but the item's learned-caps slot is tainted so the
+                        # inflated caps are never written back.
+                        forced = {
+                            ch for ch in fp.overflow(round_name) if ch in it.caps
+                        }
+                        if forced:
+                            kinds |= forced
+                            if self._tainted_caps is not None:
+                                self._tainted_caps.add(
+                                    self._caps_key(round_name, it)
+                                )
                     tripped[id(it)] = kinds
                     it.result = results[i]
             phase["sync"] = phase.get("sync", 0.0) + (
@@ -1446,17 +1591,33 @@ class DataplaneExecutor:
                     it.attempt += 1
                 it.retries += 1
                 if it.retries > self.max_retries:
-                    raise RuntimeError(
+                    raise RetryExhaustedError(
                         f"stage {it.state.skey} op {round_name} still overflows "
-                        f"after {self.max_retries} capacity doublings"
+                        f"after {self.max_retries} capacity doublings",
+                        stage=it.state.skey,
+                        op_round=round_name,
+                        attempts=it.retries,
+                        attempt_log=tuple(self._retry_log),
                     )
                 retry.append(it)
             pending = retry
+        quarantined: set = set()
         for it in items:
             if not it.caps:        # count-only rounds carry no capacities
                 continue
-            self._learned_caps[(round_name, it.group, it.key)] = dict(it.caps)
-            self._learned_caps.move_to_end((round_name, it.group, it.key))
+            k = self._caps_key(round_name, it)
+            if self._tainted_caps is not None and k in self._tainted_caps:
+                # this slot's caps were doubled by *injected* overflow — the
+                # data never needed them, so writing them back would pin the
+                # steady state at fault-inflated buffer sizes
+                if k not in quarantined:
+                    quarantined.add(k)
+                    self._learned_caps.pop(k, None)
+                    self._caps_quarantined += 1
+                    self.caps_quarantined += 1
+                continue
+            self._learned_caps[k] = dict(it.caps)
+            self._learned_caps.move_to_end(k)
         while len(self._learned_caps) > self._LEARNED_CAPS_CAPACITY:
             self._learned_caps.popitem(last=False)
             self._caps_evictions += 1
@@ -1470,7 +1631,8 @@ class DataplaneExecutor:
                           floor):
         """Count-then-emit capacity sizing (``exact_caps=True``).
 
-        Items whose (round, group, key) slot has no learned caps are run
+        Items whose learned-caps slot (round, group, key, data fingerprint)
+        is empty are run
         through a collective-free ``<round>/count`` pass — same destination /
         key algebra as the emit, same attempt-0 salts, but a histogram or
         scalar count instead of an exchange — and their emit caps are set
@@ -1484,7 +1646,7 @@ class DataplaneExecutor:
         stable from run 2 onward."""
         fresh = [
             it for it in items
-            if not self._learned_caps.get((round_name, it.group, it.key))
+            if not self._learned_caps.get(self._caps_key(round_name, it))
         ]
         fresh_ids = {id(it) for it in fresh}
         for it in items:

@@ -324,6 +324,37 @@ class RoundProgram:
 
 
 # ---------------------------------------------------------------------------
+# Run configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Per-run execution knobs threaded through ``Executor.run_many``.
+
+    Separates *what* runs (the :class:`RoundProgram`, cached and reused
+    across queries) from *how this particular run* behaves — so deadlines
+    and fault plans never leak into plan cache keys or coalesce signatures.
+
+    Attributes:
+        materialize: gather output rows to host (False = sizes only).
+        deadline: absolute ``time.monotonic()`` instant after which the
+            executor raises ``DeadlineExceededError``.  Checked *between*
+            dispatches only — a collective in flight is never abandoned
+            mid-rendezvous — so overshoot is bounded by one bucket dispatch.
+            None = no budget.
+        fault_plan: a ``repro.mpc.faults.FaultPlan`` consulted at the
+            executor's injection sites for this run, overriding any plan the
+            executor itself was constructed with.  None = use the
+            executor's own (which defaults to no injection).
+    """
+
+    materialize: bool = True
+    deadline: Optional[float] = None
+    fault_plan: Optional[object] = None
+
+
+# ---------------------------------------------------------------------------
 # Compilation
 # ---------------------------------------------------------------------------
 

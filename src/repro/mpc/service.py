@@ -72,13 +72,27 @@ from ..core.hypergraph import fractional_edge_cover
 from ..core.planner import heavy_parameter
 from ..core.query import Attr, JoinQuery
 from ..core.taxonomy import HeavyStats, compute_stats
+from ..train.fault import Heartbeat, StragglerMonitor
 from .executors import (
     DataplaneExecutor,
     DataplaneJoinResult,
     MPCJoinResult,
     SimulatorExecutor,
 )
-from .program import RoundProgram, coalesce_signature, compile_plan, plan_cache_key
+from .faults import (
+    DeadlineExceededError,
+    DegradedSessionError,
+    JoinServiceError,
+    QueryFailedError,
+    describe_query,
+)
+from .program import (
+    RoundProgram,
+    RunConfig,
+    coalesce_signature,
+    compile_plan,
+    plan_cache_key,
+)
 from .simulator import MPCSimulator
 from .statistics import distributed_stats
 
@@ -119,7 +133,18 @@ class ServiceStats:
     queue), ``rejected`` (admission-control bounces), ``coalesced_batches``/
     ``coalesced_queries``/``max_coalesced_batch`` (multi-query drains), and
     ``deduped`` (requests served by sharing an identical member's
-    execution)."""
+    execution).
+
+    The robustness layer (docs/design/10-robustness.md) adds: ``failed``
+    (requests resolved with a typed :class:`~repro.mpc.faults.JoinServiceError`),
+    ``deadline_exceeded`` (the subset that hit their monotonic budget),
+    ``degraded_fallbacks`` (coalesced groups whose fused dispatch failed and
+    fell back to per-member serial execution), ``drainer_crashes`` (drainer
+    supervision trips → degraded sessions), ``slow_batches`` (drain batches
+    the :class:`~repro.train.fault.StragglerMonitor` flagged), and
+    ``quarantined_caps``/``quarantined_plans`` (cache entries invalidated
+    because a failed attempt touched them — ``quarantined_caps`` mirrors the
+    executor's lifetime counter)."""
 
     submits: int = 0
     plan_hits: int = 0
@@ -138,6 +163,13 @@ class ServiceStats:
     coalesced_queries: int = 0
     max_coalesced_batch: int = 0
     deduped: int = 0
+    failed: int = 0
+    deadline_exceeded: int = 0
+    degraded_fallbacks: int = 0
+    drainer_crashes: int = 0
+    slow_batches: int = 0
+    quarantined_caps: int = 0
+    quarantined_plans: int = 0
     slo_ok: int = 0
     slo_violations: int = 0
     cold_us: Deque[float] = field(default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
@@ -252,6 +284,7 @@ class _Request:
     batch: Optional[Dict] = None          # submit_batch's shared-table memos
     future: Optional[Future] = None       # async submits resolve through this
     t_enqueue: Optional[float] = None     # perf_counter at queue admission
+    deadline: Optional[float] = None      # absolute monotonic budget (or None)
     # filled by _prepare:
     executor: object = None
     program: Optional[RoundProgram] = None
@@ -292,6 +325,25 @@ class JoinSession:
         async_autostart: start the drainer thread lazily on the first
             :meth:`submit_async` (disable to unit-test admission control or
             to drive the queue deterministically via :meth:`close`).
+        fault_plan: a :class:`~repro.mpc.faults.FaultPlan` consulted at every
+            injection site — executor dispatch/compile/overflow plus the
+            drainer — for chaos testing (None = no injection).
+        heartbeat_path: when set, the drainer writes a
+            :class:`~repro.train.fault.Heartbeat` file before every drain
+            batch, so an external supervisor can detect a wedged session.
+        straggler_factor: drain batches slower than ``factor ×`` the running
+            EMA are counted into ``stats.slow_batches`` (the
+            :class:`~repro.train.fault.StragglerMonitor` contract).
+
+    Failure semantics (docs/design/10-robustness.md): every failed request
+    resolves exactly once with a typed
+    :class:`~repro.mpc.faults.JoinServiceError` naming its query; a fused
+    coalesced dispatch that fails falls back to per-member serial execution
+    so batchmates of a poisoned query still get byte-identical results; a
+    crashed drainer resolves everything pending with
+    :class:`~repro.mpc.faults.DegradedSessionError` and flips the session
+    degraded until :meth:`restart`; caches touched by a failed attempt are
+    quarantined so transient faults never poison the warm steady state.
 
     A repeat submit of a cached query shape is the *warm path*: the plan LRU
     skips ``compile_plan``, and on the dataplane the executor's learned caps
@@ -317,6 +369,9 @@ class JoinSession:
         max_coalesce: int = 32,
         slo_target_us: Optional[float] = None,
         async_autostart: bool = True,
+        fault_plan=None,
+        heartbeat_path=None,
+        straggler_factor: float = 2.5,
     ):
         if backend not in ("dataplane", "simulator"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -339,6 +394,13 @@ class JoinSession:
         self._queue: "queue_mod.Queue" = queue_mod.Queue(maxsize=max_queue)
         self._drainer: Optional[threading.Thread] = None
         self._closed = False
+        self.fault_plan = fault_plan
+        self._degraded_cause: Optional[BaseException] = None
+        self._monitor = StragglerMonitor(factor=straggler_factor, warmup=1)
+        self._heartbeat = (
+            Heartbeat(heartbeat_path) if heartbeat_path is not None else None
+        )
+        self._batch_seq = 0
 
     # -- single-query entry ---------------------------------------------------
 
@@ -350,6 +412,7 @@ class JoinSession:
         materialize: bool = True,
         h_subsets: Optional[Sequence[Sequence[Attr]]] = None,
         fuse_semijoin: Optional[bool] = None,
+        deadline_s: Optional[float] = None,
         _batch: Optional[Dict] = None,
     ) -> SessionResult:
         """Answer one join query, reusing every cached artifact that applies.
@@ -363,18 +426,29 @@ class JoinSession:
             materialize: return result rows (False: counts only).
             h_subsets: restrict the H-taxonomy (testing).
             fuse_semijoin: override the session's default fusion flag.
+            deadline_s: monotonic-clock budget in seconds; past it the query
+                fails with :class:`~repro.mpc.faults.DeadlineExceededError`
+                (checked between dispatches, never mid-collective).
 
         Returns:
             A :class:`SessionResult` wrapping the backend result with cache
             provenance and per-phase latency.
+
+        Raises:
+            A typed :class:`~repro.mpc.faults.JoinServiceError` naming the
+            query on any failure, with the root cause (executor frames
+            included) chained on ``__cause__``.
         """
         req = _Request(
             query=query, lam=lam, stats=stats, materialize=materialize,
             h_subsets=h_subsets, fuse_semijoin=fuse_semijoin, batch=_batch,
+            deadline=self._abs_deadline(deadline_s),
         )
         out = self._execute_batch([req])[0]
         if isinstance(out, BaseException):
-            raise out
+            # re-raise with the stored traceback intact (the original frames
+            # would otherwise be replaced by this raise site)
+            raise out.with_traceback(out.__traceback__)
         return out
 
     # -- async / coalescing entry ---------------------------------------------
@@ -389,6 +463,7 @@ class JoinSession:
         fuse_semijoin: Optional[bool] = None,
         block: bool = True,
         timeout: Optional[float] = None,
+        deadline_s: Optional[float] = None,
     ) -> "Future[SessionResult]":
         """Enqueue one query; a drainer coalesces concurrent requests.
 
@@ -403,13 +478,26 @@ class JoinSession:
         increments ``stats.rejected``.
 
         The drainer thread starts lazily on the first call (disable with
-        ``async_autostart=False``; :meth:`close` then drains inline)."""
+        ``async_autostart=False``; :meth:`close` then drains inline).
+
+        ``deadline_s`` starts the request's monotonic budget at admission —
+        time spent queued counts against it, so a request stuck behind a slow
+        batch times out instead of blocking its caller forever.
+
+        A degraded session (drainer crashed — see :meth:`restart`) raises
+        :class:`~repro.mpc.faults.DegradedSessionError` immediately."""
         if self._closed:
             raise RuntimeError("session is closed")
+        if self._degraded_cause is not None:
+            raise DegradedSessionError(
+                "session is degraded (drainer crashed); call restart()",
+                cause=self._degraded_cause,
+            )
         req = _Request(
             query=query, lam=lam, stats=stats, materialize=materialize,
             h_subsets=h_subsets, fuse_semijoin=fuse_semijoin,
             future=Future(), t_enqueue=time.perf_counter(),
+            deadline=self._abs_deadline(deadline_s),
         )
         try:
             self._queue.put(req, block=block, timeout=timeout)
@@ -429,6 +517,7 @@ class JoinSession:
         lam: Optional[int] = None,
         materialize: bool = True,
         fuse_semijoin: Optional[bool] = None,
+        deadline_s: Optional[float] = None,
     ) -> List[SessionResult]:
         """Answer several queries through ONE coalesced scheduler pass.
 
@@ -437,45 +526,81 @@ class JoinSession:
         seam the tests use): same grouping by
         :func:`~repro.mpc.program.coalesce_signature`, same identical-
         submission dedup, same demux.  Results are in submission order and
-        byte-identical to one :meth:`submit` per query."""
+        byte-identical to one :meth:`submit` per query.  The first member's
+        failure raises (traceback preserved); per-member outcomes are
+        available through :meth:`submit_async` instead."""
         share: Dict = {"scatter": {}, "unique": {}}
         reqs = [
             _Request(
                 query=q, lam=lam, materialize=materialize,
                 fuse_semijoin=fuse_semijoin, batch=share,
+                deadline=self._abs_deadline(deadline_s),
             )
             for q in queries
         ]
         outs = self._execute_batch(reqs)
         for out in outs:
             if isinstance(out, BaseException):
-                raise out
+                raise out.with_traceback(out.__traceback__)
         return outs
+
+    @staticmethod
+    def _abs_deadline(deadline_s: Optional[float]) -> Optional[float]:
+        """Relative budget (seconds) → absolute ``time.monotonic`` instant."""
+        return None if deadline_s is None else time.monotonic() + deadline_s
 
     def start(self) -> None:
         """Start the drainer thread (idempotent; ``submit_async`` autostarts
-        unless the session was built with ``async_autostart=False``)."""
+        unless the session was built with ``async_autostart=False``).  A
+        degraded session refuses — :meth:`restart` is the supervised path
+        back."""
+        if self._degraded_cause is not None:
+            raise DegradedSessionError(
+                "session is degraded (drainer crashed); call restart()",
+                cause=self._degraded_cause,
+            )
         if self._drainer is None or not self._drainer.is_alive():
             self._drainer = threading.Thread(
                 target=self._drain_loop, name="join-session-drainer", daemon=True
             )
             self._drainer.start()
 
+    @property
+    def degraded(self) -> bool:
+        """True after a drainer crash, until :meth:`restart`."""
+        return self._degraded_cause is not None
+
+    def restart(self) -> None:
+        """Supervised recovery from a drainer crash: clear the degraded
+        state, reset the straggler monitor's latency model (post-fault
+        batches shouldn't be judged against a pre-fault EMA), and start a
+        fresh drainer.  Executor caches are untouched — anything a failed
+        attempt poisoned was already quarantined when it failed."""
+        if self._closed:
+            raise JoinServiceError("cannot restart a closed session")
+        self._degraded_cause = None
+        self._monitor.reset()
+        self.start()
+
     def close(self, wait: bool = True) -> None:
         """Stop accepting async submits and drain what's already queued.
 
         With a live drainer the shutdown sentinel is enqueued and (when
-        ``wait``) joined; without one (``async_autostart=False`` sessions)
-        the queue is drained inline so every pending future still resolves."""
+        ``wait``) joined; afterwards — and for drainer-less
+        (``async_autostart=False``) or degraded sessions — any request still
+        queued is swept so **every admitted request resolves exactly once**:
+        executed inline on a healthy session, failed with
+        :class:`~repro.mpc.faults.DegradedSessionError` on a degraded one."""
         if self._closed:
             return
         self._closed = True
         if self._drainer is not None and self._drainer.is_alive():
             self._queue.put(_SHUTDOWN)
-            if wait:
-                self._drainer.join()
-            return
-        # no drainer: resolve pending requests inline, in queue order
+            if not wait:
+                return
+            self._drainer.join()
+        # sweep whatever is still queued (race leftovers, degraded-session
+        # backlog, drainer-less sessions) in queue order
         pending: List[_Request] = []
         while True:
             try:
@@ -484,6 +609,15 @@ class JoinSession:
                 break
             if item is not _SHUTDOWN:
                 pending.append(item)
+        if self._degraded_cause is not None:
+            err = DegradedSessionError(
+                "session closed while degraded (drainer crashed)",
+                cause=self._degraded_cause,
+            )
+            for req in pending:
+                if self._resolve(req, err):
+                    self.stats.failed += 1
+            return
         while pending:
             batch, pending = pending[: self.max_coalesce], pending[self.max_coalesce:]
             self._process(batch)
@@ -499,7 +633,14 @@ class JoinSession:
         waiting (up to ``max_coalesce``) into one batch.  Natural batching —
         under light load batches are singletons and latency is a serial
         submit's; under burst load the batch grows and the per-dispatch cost
-        amortizes across it."""
+        amortizes across it.
+
+        Supervision: the loop body is guarded — any exception escaping it
+        (``_process`` itself never raises; this is the heartbeat/injection
+        window between dequeue and demux) degrades the session via
+        :meth:`_enter_degraded` instead of leaking a dead thread with hung
+        futures.  Each batch beats the optional heartbeat file and feeds the
+        straggler monitor."""
         while True:
             item = self._queue.get()
             if item is _SHUTDOWN:
@@ -515,9 +656,63 @@ class JoinSession:
                     stop = True
                     break
                 batch.append(nxt)
-            self._process(batch)
+            try:
+                seq = self._batch_seq
+                self._batch_seq = seq + 1
+                if self._heartbeat is not None:
+                    self._heartbeat.beat(seq)
+                if self.fault_plan is not None:
+                    self.fault_plan.at_drainer()
+                t0 = time.perf_counter()
+                self._process(batch)
+                if self._monitor.record(seq, time.perf_counter() - t0):
+                    self.stats.slow_batches += 1
+            except BaseException as e:
+                self._enter_degraded(e, batch)
+                return
             if stop:
                 return
+
+    def _enter_degraded(self, cause: BaseException, inflight: List[_Request]) -> None:
+        """Drainer-crash path: resolve the in-flight batch AND everything
+        still queued with :class:`~repro.mpc.faults.DegradedSessionError`
+        (zero hung futures), then flip the session degraded so new
+        :meth:`submit_async` calls fail fast until :meth:`restart`."""
+        self._degraded_cause = cause
+        self.stats.drainer_crashes += 1
+        err = DegradedSessionError(
+            f"session drainer crashed: {cause!r}", cause=cause
+        )
+        pending = list(inflight)
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue_mod.Empty:
+                break
+            if item is not _SHUTDOWN:
+                pending.append(item)
+        for req in pending:
+            if self._resolve(req, err):
+                self.stats.failed += 1
+
+    @staticmethod
+    def _resolve(req: _Request, out) -> bool:
+        """Resolve a request's future exactly once; True if this call did it.
+
+        The done() guard (plus the InvalidStateError backstop for the racing
+        case) is what makes crash paths safe to run concurrently with the
+        normal demux — a future can only ever carry one outcome."""
+        fut = req.future
+        if fut is None or fut.done():
+            return False
+        try:
+            if isinstance(out, BaseException):
+                fut.set_exception(out)
+            else:
+                fut.set_result(out)
+        except Exception:       # InvalidStateError: someone else won the race
+            return False
+        return True
 
     def _process(self, batch: List[_Request]) -> None:
         """Execute one drain batch and resolve its futures (never raises —
@@ -527,12 +722,7 @@ class JoinSession:
         except BaseException as e:  # defensive: _execute_batch reports per-request
             outs = [e] * len(batch)
         for req, out in zip(batch, outs):
-            if req.future is None:
-                continue
-            if isinstance(out, BaseException):
-                req.future.set_exception(out)
-            else:
-                req.future.set_result(out)
+            self._resolve(req, out)
 
     # -- the shared execution path --------------------------------------------
 
@@ -633,6 +823,21 @@ class JoinSession:
             for req in reqs:
                 self._prepare(req, req.batch if req.batch is not None else share)
 
+            # deadline admission: a request already past its budget (e.g. it
+            # queued behind a slow batch) fails cheaply before any dispatch
+            now = time.monotonic()
+            for req in reqs:
+                if (
+                    req.error is None
+                    and req.deadline is not None
+                    and now > req.deadline
+                ):
+                    req.error = DeadlineExceededError(
+                        f"query {describe_query(req.query)} exceeded its "
+                        "deadline before execution",
+                        query=req.query, deadline_s=req.deadline,
+                    )
+
             live = [r for r in reqs if r.error is None]
             outs: Dict[int, Union[SessionResult, BaseException]] = {}
 
@@ -678,23 +883,33 @@ class JoinSession:
                             seen[dk] = len(reps)
                             assign.append(len(reps))
                             reps.append(req)
+                    deadlines = [r.deadline for r in reps if r.deadline is not None]
                     t0 = time.perf_counter()
                     try:
                         results, bstats = self.executor.run_many(
                             [r.program for r in reps],
-                            materialize=members[0].materialize,
+                            config=RunConfig(
+                                materialize=members[0].materialize,
+                                deadline=min(deadlines) if deadlines else None,
+                                fault_plan=self.fault_plan,
+                            ),
                         )
                     except BaseException as e:
-                        for req in members:
-                            req.error = e
+                        if len(reps) == 1:
+                            for req in members:
+                                req.error = e
+                        else:
+                            # coalesced-group failure isolation: the fused
+                            # dispatch is all-or-nothing, so fall back to
+                            # per-member serial runs — the poisoned member
+                            # fails alone and its batchmates still produce
+                            # the exact bytes a serial submit would have
+                            # (salts never depend on coalescing)
+                            self.stats.degraded_fallbacks += 1
+                            self._run_serial_fallback(members, reps, assign, outs, len(reqs))
                         continue
                     execute_us = (time.perf_counter() - t0) * 1e6
-                    self.stats.jit_hits += bstats.jit_cache_hits
-                    self.stats.jit_misses += bstats.jit_cache_misses
-                    self.stats.retries += bstats.retries
-                    self.stats.caps_hits += bstats.caps_hits
-                    self.stats.caps_misses += bstats.caps_misses
-                    self.stats.caps_evictions += bstats.caps_evictions
+                    self._absorb(bstats)
                     coalesced = len(members) > 1
                     for req, ri in zip(members, assign):
                         outs[id(req)] = self._wrap(
@@ -710,12 +925,31 @@ class JoinSession:
                     self.stats.max_coalesced_batch, len(reqs)
                 )
             self.stats.cached_plans = len(self._plans)
+            if self.executor is not None:
+                # mirror of the executor's lifetime quarantine counter (the
+                # per-run count is unavailable when the run itself raised)
+                self.stats.quarantined_caps = self.executor.caps_quarantined
 
             t_done = time.perf_counter()
             final: List[Union[SessionResult, BaseException]] = []
             for req in reqs:
                 if req.error is not None:
-                    final.append(req.error)
+                    err = self._typed_error(req)
+                    req.error = err
+                    self.stats.failed += 1
+                    if isinstance(err, DeadlineExceededError):
+                        self.stats.deadline_exceeded += 1
+                    # plan quarantine: the compiled program a failed attempt
+                    # used is dropped from the LRU — if the failure was the
+                    # plan's fault (stale histogram, planner bug), the next
+                    # submit recompiles instead of re-failing forever
+                    if (
+                        req.plan_key is not None
+                        and self._plans.pop(req.plan_key, None) is not None
+                    ):
+                        self.stats.quarantined_plans += 1
+                        self.stats.cached_plans = len(self._plans)
+                    final.append(err)
                     continue
                 out = outs[id(req)]
                 if req.t_enqueue is not None:
@@ -730,6 +964,79 @@ class JoinSession:
                         self.stats.slo_violations += 1
                 final.append(out)
             return final
+
+    def _absorb(self, bstats) -> None:
+        """Aggregate one ``run_many`` call's batch-level counters into
+        :attr:`stats` (exactly once per scheduler pass)."""
+        self.stats.jit_hits += bstats.jit_cache_hits
+        self.stats.jit_misses += bstats.jit_cache_misses
+        self.stats.retries += bstats.retries
+        self.stats.caps_hits += bstats.caps_hits
+        self.stats.caps_misses += bstats.caps_misses
+        self.stats.caps_evictions += bstats.caps_evictions
+
+    def _run_serial_fallback(
+        self,
+        members: List[_Request],
+        reps: List[_Request],
+        assign: List[int],
+        outs: Dict,
+        batch_size: int,
+    ) -> None:
+        """The group-isolation fallback ladder, rung 2: after a fused
+        coalesced dispatch failed, run each deduplicated representative as
+        its own serial scheduler pass (own deadline, fault plan still
+        active).  Only the members whose representative fails get an error;
+        everyone else's rows are byte-identical to a fault-free serial
+        submit because routing salts derive from the query-unqualified stage
+        key, never from the batch shape."""
+        rep_out: List = []
+        for rep in reps:
+            t1 = time.perf_counter()
+            try:
+                res_list, bstats = self.executor.run_many(
+                    [rep.program],
+                    config=RunConfig(
+                        materialize=rep.materialize,
+                        deadline=rep.deadline,
+                        fault_plan=self.fault_plan,
+                    ),
+                )
+            except BaseException as e:
+                rep_out.append(e)
+                continue
+            self._absorb(bstats)
+            rep_out.append((res_list[0], (time.perf_counter() - t1) * 1e6))
+        for req, ri in zip(members, assign):
+            o = rep_out[ri]
+            if isinstance(o, BaseException):
+                req.error = o
+            else:
+                res, ex_us = o
+                outs[id(req)] = self._wrap(
+                    req, res, ex_us, batch_size,
+                    coalesced=False, deduplicated=(req is not reps[ri]),
+                )
+
+    def _typed_error(self, req: _Request) -> JoinServiceError:
+        """Map a request's raw failure onto the taxonomy, always naming the
+        query and always chaining the root cause's traceback."""
+        e = req.error
+        if isinstance(e, DeadlineExceededError):
+            if e.query is None:
+                out = DeadlineExceededError(
+                    f"query {describe_query(req.query)}: {e}",
+                    query=req.query, op_round=e.op_round,
+                    deadline_s=e.deadline_s,
+                )
+                out.__cause__ = e
+                return out
+            return e
+        if isinstance(e, (QueryFailedError, DegradedSessionError, AdmissionError)):
+            return e
+        return QueryFailedError(
+            req.query, e, attempt_log=getattr(e, "attempt_log", ())
+        )
 
     def _wrap(
         self,

@@ -46,6 +46,15 @@ class StragglerMonitor:
         self._ema = (1 - self.alpha) * self._ema + self.alpha * upd
         return slow
 
+    def reset(self) -> None:
+        """Forget the latency model (EMA + warmup), keep the event log.
+
+        Supervised-restart hook: after a crash/recovery cycle the first
+        post-restart steps recompile and re-warm caches, so judging them
+        against the pre-crash EMA would flag every one of them."""
+        self._ema = None
+        self._n = 0
+
     @property
     def ema_s(self) -> Optional[float]:
         return self._ema

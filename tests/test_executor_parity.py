@@ -144,7 +144,7 @@ def _join_packed_flags(ex):
     one flag per composite-key LocalJoin bucket (dup_pairs non-empty)."""
     return [
         key[4]
-        for (_, _, key) in ex._learned_caps
+        for (_, _, key, _) in ex._learned_caps
         if key and key[0] == "join" and len(key) == 5 and key[3]
     ]
 

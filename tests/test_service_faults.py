@@ -1,0 +1,456 @@
+"""Chaos suite: the fault-injection layer and the hardened JoinSession.
+
+The robustness acceptance bar (docs/design/10-robustness.md):
+
+  * **Typed failures.**  Every failed request surfaces a
+    ``JoinServiceError`` subclass *naming the query*, with the root cause —
+    executor frames included — chained on ``__cause__`` (no lost
+    tracebacks across the future / ``raise out`` boundary).
+  * **No hung futures.**  Under any seeded FaultPlan (dispatch failures,
+    persistent overflow, drainer crashes, deadlines) every admitted request
+    resolves exactly once, including requests in flight when the drainer
+    dies.
+  * **Isolation.**  A poisoned query inside a coalesced batch fails alone:
+    the fused dispatch falls back to per-member serial execution and the
+    batchmates return rows byte-identical to a fault-free serial run
+    (routing salts never depend on the batch shape — the PR 7 invariant).
+  * **Recovery.**  Caches touched by a failed attempt are quarantined, so
+    once the fault plan drains the session converges back to the
+    retries=0 / jit_misses=0 warm steady state.
+
+Determinism: FaultPlan decisions are pure functions of
+(seed, site, event index, rule index), so every scenario here replays
+identically — the chaos sweep is as reproducible as a unit test.
+"""
+
+import time
+import traceback
+
+import numpy as np
+import pytest
+
+from repro.core.query import JoinQuery, Relation, random_query, reference_join
+from repro.core.taxonomy import compute_stats
+from repro.mpc import (
+    DataplaneExecutor,
+    DeadlineExceededError,
+    DegradedSessionError,
+    FaultPlan,
+    FaultRule,
+    InjectedDispatchError,
+    JoinServiceError,
+    JoinSession,
+    QueryFailedError,
+    RetryExhaustedError,
+    RunConfig,
+)
+from repro.mpc.faults import describe_query
+from repro.mpc.program import compile_plan
+
+
+def rows_key(rows):
+    rows = getattr(rows, "data", rows)
+    return sorted(map(tuple, np.asarray(rows).tolist()))
+
+
+def perm_query(seed: int, n: int = 60) -> JoinQuery:
+    """(A,B) ⋈ (B,C) permutation graphs: distinct data, one plan key."""
+    rng = np.random.default_rng(seed)
+    ab = np.stack([np.arange(n), rng.permutation(n)], axis=1)
+    bc = np.stack([np.arange(n), rng.permutation(n)], axis=1)
+    return JoinQuery.make(
+        [Relation.make(("A", "B"), ab), Relation.make(("B", "C"), bc)]
+    )
+
+
+def skew_triangle():
+    return random_query(
+        np.random.default_rng(2), "clique", 3, tuples_per_rel=120, dom_size=24,
+        skew=2.0,
+    )
+
+
+def serial_reference(queries, lam=4):
+    s = JoinSession(p=8, backend="dataplane")
+    return [s.submit(q, lam=lam) for q in queries]
+
+
+def outcomes(futures, timeout=120.0):
+    """Resolve every future (bounded wait — a hang IS the failure)."""
+    outs = []
+    for f in futures:
+        try:
+            outs.append(f.result(timeout=timeout))
+        except BaseException as e:
+            outs.append(e)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism and rule mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_is_deterministic_and_rule_scoped():
+    def run(seed):
+        fp = FaultPlan([FaultRule(site="dispatch", rate=0.3)], seed=seed)
+        fired = []
+        for _ in range(200):
+            try:
+                fp.at_dispatch("output")
+                fired.append(0)
+            except InjectedDispatchError:
+                fired.append(1)
+        return fired
+
+    a, b = run(7), run(7)
+    assert a == b, "same seed ⇒ identical injection schedule"
+    assert 20 < sum(a) < 110, "rate≈0.3 over 200 events"
+    assert run(8) != a, "different seed ⇒ different schedule"
+
+    # count caps total injections; after skips warmup events; rounds filter
+    fp = FaultPlan(
+        [FaultRule(site="dispatch", rate=1.0, count=2, after=3,
+                   rounds=("step1",))],
+        seed=0,
+    )
+    hits = 0
+    for rnd in ["step1"] * 10 + ["output"] * 10:
+        try:
+            fp.at_dispatch(rnd)
+        except InjectedDispatchError:
+            hits += 1
+    assert hits == 2, "after=3 skips 3 step1 events, count=2 then drains"
+    assert fp.drained() and fp.injected["dispatch"] == 2
+    assert all(rnd == "step1" for _, rnd, _, _ in fp.log)
+
+    with pytest.raises(ValueError):
+        FaultRule(site="nonsense")
+    with pytest.raises(ValueError):
+        FaultRule(site="dispatch", rate=1.5)
+
+
+def test_overflow_rules_only_force_carried_channels():
+    fp = FaultPlan.persistent_overflow(channels=("slot", "out"))
+    assert fp.overflow("step1") == ("out", "slot")
+    assert FaultPlan.none().overflow("step1") == ()
+    assert FaultPlan.none().drained()
+
+
+# ---------------------------------------------------------------------------
+# Typed errors + traceback preservation (satellite: the `raise out` fix)
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_fault_surfaces_as_query_failed_with_executor_frames():
+    q = perm_query(2)
+    session = JoinSession(
+        p=8, backend="dataplane",
+        fault_plan=FaultPlan.dispatch_failures(1.0, count=1),
+    )
+    with pytest.raises(QueryFailedError) as ei:
+        session.submit(q, lam=4)
+    err = ei.value
+    assert err.query is q and describe_query(q) in str(err)
+    assert isinstance(err.__cause__, InjectedDispatchError)
+    # the satellite fix: the formatted chain must still show where inside
+    # the executor the failure happened, across the stored-exception re-raise
+    chain = "".join(traceback.format_exception(type(err), err, err.__traceback__))
+    assert "_run_buckets" in chain
+    assert "InjectedDispatchError" in chain
+    # plan quarantine: the failed attempt dropped its plan-LRU entry
+    assert session.stats.failed == 1
+    assert session.stats.quarantined_plans == 1
+    # the drained plan injects nothing more — full recovery
+    r = session.submit(q, lam=4)
+    assert rows_key(r.rows) == rows_key(reference_join(q))
+    assert r.retries == 0
+
+
+def test_all_faults_resolve_as_typed_join_service_errors():
+    # a completely broken request (lam=0 dies in preparation) still comes
+    # back typed and named — not a bare exception
+    session = JoinSession(p=8, backend="dataplane")
+    q = perm_query(3)
+    with pytest.raises(JoinServiceError) as ei:
+        session.submit(q, lam=0)
+    assert ei.value.query is q
+    # JoinServiceError subclasses RuntimeError: pre-taxonomy callers keep working
+    assert isinstance(ei.value, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# max_retries exhaustion + learned-caps quarantine (satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("batch_stages", [True, False])
+def test_retry_exhaustion_raises_typed_and_quarantines(batch_stages):
+    q = perm_query(4)
+    prog = compile_plan(q, compute_stats(q, lam=4), 8)
+    ex = DataplaneExecutor(max_retries=2, batch_stages=batch_stages)
+    with pytest.raises(RetryExhaustedError) as ei:
+        ex.run(prog.rebind(q), config=RunConfig(
+            fault_plan=FaultPlan.persistent_overflow(channels=("slot",))
+        ))
+    err = ei.value
+    assert err.op_round is not None and err.attempts == 3
+    assert any("slot" in entry[2] for entry in err.attempt_log)
+    # quarantine: no fault-inflated capacities survive the failed attempt —
+    # the next clean run rebuilds exact caps and converges straight back
+    res = ex.run(prog.rebind(q))
+    assert res.retries == 0
+    assert rows_key(res.rows) == rows_key(reference_join(q))
+
+
+def test_retry_exhaustion_through_run_many_and_service():
+    queries = [perm_query(s) for s in (5, 6)]
+    progs = [compile_plan(q, compute_stats(q, lam=4), 8).rebind(q) for q in queries]
+    ex = DataplaneExecutor(max_retries=1)
+    with pytest.raises(RetryExhaustedError):
+        ex.run_many(progs, config=RunConfig(
+            fault_plan=FaultPlan.persistent_overflow(channels=("slot",))
+        ))
+    # service wraps it per query, cause preserved
+    session = JoinSession(
+        p=8, backend="dataplane",
+        executor=DataplaneExecutor(max_retries=1),
+    )
+    session.fault_plan = FaultPlan.persistent_overflow(channels=("slot",))
+    with pytest.raises(QueryFailedError) as ei:
+        session.submit(queries[0], lam=4)
+    assert isinstance(ei.value.cause, RetryExhaustedError)
+    assert ei.value.attempt_log, "retry entries travel on the wrapper"
+    # drop the plan's fault source and verify steady-state recovery
+    session.fault_plan = None
+    r1 = session.submit(queries[0], lam=4)
+    r2 = session.submit(queries[0], lam=4)
+    assert r1.retries == 0 and r2.retries == 0
+    assert r2.jit_cache_misses == 0
+    assert rows_key(r2.rows) == rows_key(reference_join(queries[0]))
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_expired_deadline_fails_before_any_dispatch():
+    session = JoinSession(p=8, backend="dataplane")
+    q = perm_query(7)
+    with pytest.raises(DeadlineExceededError) as ei:
+        session.submit(q, lam=4, deadline_s=-0.001)
+    assert ei.value.query is q
+    assert session.stats.deadline_exceeded == 1
+    assert session.stats.failed == 1
+    # no budget ⇒ normal service
+    r = session.submit(q, lam=4)
+    assert rows_key(r.rows) == rows_key(reference_join(q))
+
+
+def test_deadline_trips_between_dispatches_mid_run():
+    # injected dispatch latency (the straggler site) guarantees the budget
+    # expires mid-run even when the process-wide executable cache is already
+    # warm from earlier suites — the overrun must not depend on compile time
+    session = JoinSession(
+        p=8, backend="dataplane",
+        fault_plan=FaultPlan(
+            [FaultRule(site="latency", rate=1.0, delay_s=0.05)], seed=5
+        ),
+    )
+    q = skew_triangle()
+    with pytest.raises(DeadlineExceededError) as ei:
+        session.submit(q, lam=4, deadline_s=0.02)
+    err = ei.value
+    assert err.query is q
+    assert isinstance(err.__cause__, DeadlineExceededError)
+    assert err.op_round is not None, "raised between dispatches, op round known"
+    # the same query without a deadline completes fine afterwards
+    r = session.submit(q, lam=4)
+    assert rows_key(r.rows) == rows_key(reference_join(q))
+
+
+def test_async_deadline_counts_queue_time():
+    session = JoinSession(p=8, backend="dataplane", async_autostart=False)
+    q = perm_query(8)
+    fut = session.submit_async(q, lam=4, deadline_s=0.02)
+    time.sleep(0.1)         # budget burns away while queued, drainer asleep
+    session.close()         # inline drain resolves the (now expired) request
+    with pytest.raises(DeadlineExceededError):
+        fut.result(timeout=0)
+
+
+# ---------------------------------------------------------------------------
+# Coalesced-group failure isolation (tentpole item 3)
+# ---------------------------------------------------------------------------
+
+
+def test_poisoned_query_fails_alone_batchmates_byte_identical():
+    queries = [perm_query(s) for s in (10, 11, 12, 13)]
+    serial = serial_reference(queries)
+    # injection 1 kills the fused 4-query dispatch; injection 2 kills the
+    # first member's serial fallback run; the rule then drains, so members
+    # 2..4 complete — deterministic single-victim schedule
+    session = JoinSession(
+        p=8, backend="dataplane",
+        fault_plan=FaultPlan([FaultRule(site="dispatch", rate=1.0, count=2)]),
+        async_autostart=False,
+    )
+    futs = [session.submit_async(q, lam=4) for q in queries]
+    session.close()     # one inline drain batch → one coalesced group
+    outs = outcomes(futs, timeout=0)
+    assert isinstance(outs[0], QueryFailedError)
+    assert outs[0].query is queries[0]
+    for out, ref in zip(outs[1:], serial[1:]):
+        assert np.array_equal(out.rows, ref.rows), "survivor byte-identity"
+        assert out.coalesced is False, "fallback runs are serial passes"
+    assert session.stats.degraded_fallbacks == 1
+    assert session.stats.failed == 1
+
+
+# ---------------------------------------------------------------------------
+# Drainer supervision: crash, degraded state, restart (tentpole item 4)
+# ---------------------------------------------------------------------------
+
+
+def _wait_degraded(session, timeout=30.0):
+    t0 = time.monotonic()
+    while not session.degraded:
+        if time.monotonic() - t0 > timeout:
+            raise AssertionError("session never degraded")
+        time.sleep(0.02)
+
+
+def test_drainer_crash_resolves_every_future_and_degrades(tmp_path):
+    queries = [perm_query(s) for s in (20, 21, 22)]
+    session = JoinSession(
+        p=8, backend="dataplane",
+        fault_plan=FaultPlan([FaultRule(site="drainer", rate=1.0, count=1)]),
+        async_autostart=False,
+        heartbeat_path=tmp_path / "hb",
+    )
+    futs = [session.submit_async(q, lam=4) for q in queries]
+    session.start()     # first drain batch crashes between dequeue and demux
+    _wait_degraded(session)
+    outs = outcomes(futs, timeout=30)
+    assert all(isinstance(o, DegradedSessionError) for o in outs), \
+        "zero hung futures: in-flight batch AND queued leftovers resolve"
+    assert session.stats.drainer_crashes == 1
+    assert session.stats.failed == len(queries)
+    assert (tmp_path / "hb").exists(), "heartbeat beaten before the crash"
+    # degraded session fails fast on both entry points
+    with pytest.raises(DegradedSessionError):
+        session.submit_async(queries[0], lam=4)
+    with pytest.raises(DegradedSessionError):
+        session.start()
+    # supervised restart: plan drained, the session serves again
+    session.restart()
+    assert not session.degraded
+    r = session.submit_async(queries[0], lam=4).result(timeout=120)
+    assert rows_key(r.rows) == rows_key(reference_join(queries[0]))
+    session.close()
+
+
+def test_close_sweeps_queue_of_degraded_session():
+    # the shutdown-race satellite: requests admitted around a drainer death
+    # must still resolve exactly once, through close()
+    session = JoinSession(
+        p=8, backend="dataplane",
+        fault_plan=FaultPlan([FaultRule(site="drainer", rate=1.0, count=1)]),
+        async_autostart=False,
+    )
+    f1 = session.submit_async(perm_query(23), lam=4)
+    session.start()
+    _wait_degraded(session)
+    # bypass the degraded fast-fail to model the race where a request is
+    # admitted just as the drainer dies: it must not hang forever
+    from repro.mpc.service import _Request
+    from concurrent.futures import Future
+    straggler = _Request(query=perm_query(24), lam=4, future=Future(),
+                         t_enqueue=time.perf_counter())
+    session._queue.put(straggler)
+    session.close()
+    outs = outcomes([f1, straggler.future], timeout=5)
+    assert all(isinstance(o, DegradedSessionError) for o in outs)
+
+
+def test_resolve_is_exactly_once():
+    from repro.mpc.service import JoinSession as S, _Request
+    from concurrent.futures import Future
+    req = _Request(query=None, future=Future())
+    assert S._resolve(req, RuntimeError("first"))
+    assert not S._resolve(req, RuntimeError("second")), "done futures stay won"
+    assert not S._resolve(_Request(query=None), RuntimeError("x")), \
+        "inline requests have no future to resolve"
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos sweep (acceptance criterion: 5% dispatch failures)
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_sweep_mixed_workload_recovers_to_steady_state():
+    mixed = [perm_query(30), perm_query(31), skew_triangle(), perm_query(32)]
+    serial = serial_reference(mixed)
+    ref = {id(q): r for q, r in zip(mixed, serial)}
+
+    fault_plan = FaultPlan(
+        [FaultRule(site="dispatch", rate=0.05, count=4)], seed=1234
+    )
+    session = JoinSession(p=8, backend="dataplane", fault_plan=fault_plan)
+    try:
+        waves, failed = 0, 0
+        while not fault_plan.drained() and waves < 12:
+            waves += 1
+            futs = [(q, session.submit_async(q, lam=4)) for q in mixed]
+            for q, f in futs:
+                try:
+                    r = f.result(timeout=180)   # bounded: a hang is a failure
+                except BaseException as e:
+                    failed += 1
+                    assert isinstance(e, JoinServiceError), \
+                        f"untyped failure {type(e).__name__}"
+                    assert getattr(e, "query", None) is q or \
+                        describe_query(q) in str(e), "failure must name its query"
+                else:
+                    assert np.array_equal(r.rows, ref[id(q)].rows), \
+                        "survivor byte-identity under injected faults"
+        assert fault_plan.drained(), "the seeded schedule must actually inject"
+        assert fault_plan.injected["dispatch"] == 4
+
+        # counters reconcile with the injection schedule: every query failure
+        # consumed at least one injected fault, and fused-group failures that
+        # fell back serially are separately visible
+        assert session.stats.failed == failed
+        assert failed <= fault_plan.total_injected
+        assert session.stats.degraded_fallbacks <= fault_plan.injected["dispatch"]
+        assert session.stats.deadline_exceeded == 0
+
+        # recovery: with the plan drained, one settling wave re-derives any
+        # quarantined caches, then the steady state must be clean
+        session.submit_coalesced(mixed, lam=4)
+        jit0, ret0 = session.stats.jit_misses, session.stats.retries
+        out = session.submit_coalesced(mixed, lam=4)
+        for r, q in zip(out, mixed):
+            assert np.array_equal(r.rows, ref[id(q)].rows)
+        assert session.stats.jit_misses == jit0, "warm steady state: no recompiles"
+        assert session.stats.retries == ret0, "warm steady state: no retries"
+    finally:
+        session.close()
+
+
+def test_latency_faults_are_invisible_to_results():
+    # stragglers (injected dispatch latency) slow things down but change
+    # nothing: results stay byte-identical, nothing fails
+    q = perm_query(33)
+    serial = serial_reference([q])[0]
+    session = JoinSession(
+        p=8, backend="dataplane",
+        fault_plan=FaultPlan(
+            [FaultRule(site="latency", rate=0.5, delay_s=0.005)], seed=5
+        ),
+    )
+    r = session.submit(q, lam=4)
+    assert np.array_equal(r.rows, serial.rows)
+    assert session.stats.failed == 0
+    assert session.fault_plan.injected["latency"] > 0
