@@ -1,3 +1,13 @@
-"""Roofline analysis from compiled dry-run artifacts."""
+"""Roofline analysis from compiled dry-run artifacts + the symbolic
+per-round load model that backs the static verifier's ``load-bound`` rule."""
 
+from .loadmodel import (
+    DATA_ROUNDS,
+    MODEL_CONSTANT,
+    RoundBound,
+    ideal_load,
+    predicted_load,
+    round_bounds,
+    round_bounds_by_name,
+)
 from .roofline import collective_bytes, roofline_terms, HW

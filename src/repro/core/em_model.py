@@ -20,7 +20,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from .hypergraph import fractional_edge_cover
+from .hypergraph import rho
 from .query import JoinQuery
 
 
@@ -55,8 +55,8 @@ def em_cost_from_run(query: JoinQuery, result, memory_words: int, block_words: i
     for name, load in sim.merged_round_loads().items():
         # write + read each machine's received words in blocks, one pass per round
         io += 2 * p * (math.ceil(load / block_words) + 1)
-    rho = float(fractional_edge_cover(query.hypergraph)[0])
-    bound = query.m ** rho / (block_words * memory_words ** (rho - 1))
+    rho_val = float(rho(query))
+    bound = query.m ** rho_val / (block_words * memory_words ** (rho_val - 1))
     return EMCost(
         m=query.m,
         memory_words=memory_words,

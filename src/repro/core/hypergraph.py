@@ -140,7 +140,21 @@ def fractional_edge_packing(g: Hypergraph) -> Tuple[Fraction, Dict[Edge, Fractio
     return _solve_lp(g, cover=False)
 
 
-def rho(g: Hypergraph) -> Fraction:
+def rho(g) -> Fraction:
+    """ρ: the fractional edge cover number (exact, as a Fraction).
+
+    Accepts either a :class:`Hypergraph` or any object exposing a
+    ``.hypergraph`` attribute (a :class:`repro.core.query.JoinQuery`,
+    duck-typed to avoid a circular import) — so ρ call sites stop
+    hand-building ``fractional_edge_cover(query.hypergraph)[0]``."""
+    if not isinstance(g, Hypergraph):
+        hg = getattr(g, "hypergraph", None)
+        if not isinstance(hg, Hypergraph):
+            raise TypeError(
+                f"rho() wants a Hypergraph or an object with a .hypergraph "
+                f"attribute, got {type(g).__name__}"
+            )
+        g = hg
     return fractional_edge_cover(g)[0]
 
 

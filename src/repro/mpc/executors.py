@@ -1123,6 +1123,11 @@ class DataplaneExecutor:
                     f"sequences); got {programs[0].op_sequence()} vs "
                     f"{prog.op_sequence()}"
                 )
+        if config is not None and config.verify:
+            from .verify import verify_program  # local: verify imports program
+
+            for prog in programs:
+                verify_program(prog, caps=self._learned_caps)
         self._retries = 0
         self._retry_log: List[Tuple[Tuple, str, str]] = []
         self._qi_retries: Dict[int, int] = defaultdict(int)

@@ -30,12 +30,13 @@ saved when a light edge's X attribute is not a border attribute).
 from __future__ import annotations
 
 import itertools
+import os
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.hypergraph import fractional_edge_cover
+from ..core.hypergraph import rho
 from ..core.planner import (
     ConfigPlan,
     HPlanWithAlloc,
@@ -347,16 +348,30 @@ class RunConfig:
             executor's injection sites for this run, overriding any plan the
             executor itself was constructed with.  None = use the
             executor's own (which defaults to no injection).
+        verify: re-run the static verifier (``repro.mpc.verify``) over every
+            program of this run — including the executor's learned-caps
+            store — before any collective is dispatched.  Off by default;
+            compile-time verification is governed separately by
+            ``compile_plan(verify=...)`` / the ``REPRO_VERIFY`` env var.
     """
 
     materialize: bool = True
     deadline: Optional[float] = None
     fault_plan: Optional[object] = None
+    verify: bool = False
 
 
 # ---------------------------------------------------------------------------
 # Compilation
 # ---------------------------------------------------------------------------
+
+
+def _verify_default() -> bool:
+    """Resolve compile-time verification from the ``REPRO_VERIFY`` env var
+    (tests/conftest.py turns it on for the whole suite)."""
+    return os.environ.get("REPRO_VERIFY", "0").strip().lower() not in (
+        "", "0", "false", "off",
+    )
 
 
 def compile_plan(
@@ -365,6 +380,7 @@ def compile_plan(
     p: int,
     h_subsets: Optional[Sequence[Sequence[Attr]]] = None,
     fuse_semijoin: bool = False,
+    verify: Optional[bool] = None,
 ) -> RoundProgram:
     """Compile the full H-taxonomy of ``query`` into a :class:`RoundProgram`.
 
@@ -372,10 +388,15 @@ def compile_plan(
     inactive-edge feasibility (from the extended histogram — ruled-out η cost
     no communication), residual sizing, step-1 machine allocation, and the
     H = attset(Q) emit set.  ``h_subsets`` restricts the taxonomy (testing).
+
+    ``verify`` runs the static verifier (``repro.mpc.verify``) over the
+    compiled program before returning it; None defers to the ``REPRO_VERIFY``
+    env var (default on in tests, off in production hot paths — the service
+    layer times its own verification pass explicitly).
     """
     attset = query.attset
     k = len(attset)
-    rho_val = float(fractional_edge_cover(query.hypergraph)[0])
+    rho_val = float(rho(query))
 
     if h_subsets is None:
         h_subsets = [
@@ -421,6 +442,10 @@ def compile_plan(
     )
     if fuse_semijoin:
         program = fuse_semijoin_pass(program)
+    if _verify_default() if verify is None else verify:
+        from .verify import verify_program  # local: verify imports this module
+
+        verify_program(program)
     return program
 
 

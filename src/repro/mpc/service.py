@@ -68,7 +68,7 @@ from concurrent.futures import Future
 from dataclasses import dataclass, field, replace
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
-from ..core.hypergraph import fractional_edge_cover
+from ..core.hypergraph import rho
 from ..core.planner import heavy_parameter
 from ..core.query import Attr, JoinQuery
 from ..core.taxonomy import HeavyStats, compute_stats
@@ -83,16 +83,19 @@ from .faults import (
     DeadlineExceededError,
     DegradedSessionError,
     JoinServiceError,
+    ProgramVerificationError,
     QueryFailedError,
     describe_query,
 )
 from .program import (
     RoundProgram,
     RunConfig,
+    _verify_default,
     coalesce_signature,
     compile_plan,
     plan_cache_key,
 )
+from .verify import verify_bindings, verify_program
 from .simulator import MPCSimulator
 from .statistics import distributed_stats
 
@@ -144,7 +147,14 @@ class ServiceStats:
     the :class:`~repro.train.fault.StragglerMonitor` flagged), and
     ``quarantined_caps``/``quarantined_plans`` (cache entries invalidated
     because a failed attempt touched them — ``quarantined_caps`` mirrors the
-    executor's lifetime counter)."""
+    executor's lifetime counter).
+
+    The verification layer (docs/design/11-verification.md) adds:
+    ``verified`` (submits whose compiled program passed the *full* static
+    verifier — plan-cache misses only; hits re-verify bindings, which is
+    deliberately not counted here) and ``verify_us`` (total wall time spent
+    in any verification, full or bindings-only, so the warm-path cost is
+    observable and provably near zero)."""
 
     submits: int = 0
     plan_hits: int = 0
@@ -172,6 +182,8 @@ class ServiceStats:
     quarantined_plans: int = 0
     slo_ok: int = 0
     slo_violations: int = 0
+    verified: int = 0
+    verify_us: float = 0.0
     cold_us: Deque[float] = field(default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
     warm_us: Deque[float] = field(default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
     e2e_us: Deque[float] = field(default_factory=lambda: deque(maxlen=LATENCY_WINDOW))
@@ -233,6 +245,13 @@ class SessionResult:
     deduplicated: bool = False
     queue_us: float = 0.0
     e2e_us: float = 0.0
+    #: True when the *full* static verifier ran over this submit's compiled
+    #: program (plan-cache miss); cache hits re-verify bindings only and
+    #: report False — the observable proof that verification stays off the
+    #: warm hot path.  ``verify_us`` is the time spent either way (part of
+    #: ``total_us``).
+    verified: bool = False
+    verify_us: float = 0.0
 
     @property
     def count(self) -> int:
@@ -292,6 +311,8 @@ class _Request:
     plan_cache_hit: bool = False
     stats_us: float = 0.0
     compile_us: float = 0.0
+    verified: bool = False
+    verify_us: float = 0.0
     error: Optional[BaseException] = None
 
 
@@ -372,6 +393,7 @@ class JoinSession:
         fault_plan=None,
         heartbeat_path=None,
         straggler_factor: float = 2.5,
+        verify: Optional[bool] = None,
     ):
         if backend not in ("dataplane", "simulator"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -381,6 +403,10 @@ class JoinSession:
         self.backend = backend
         self.seed = seed
         self.fuse_semijoin = fuse_semijoin
+        # static verification: full pass on every plan-cache miss, bindings
+        # re-check on every hit (None defers to the REPRO_VERIFY env var, so
+        # the test suite runs verified by default without touching prod).
+        self.verify = _verify_default() if verify is None else bool(verify)
         self.plan_cache_size = plan_cache_size
         self.max_coalesce = max_coalesce
         self.slo_target_us = slo_target_us
@@ -745,10 +771,7 @@ class JoinSession:
                 if stats is not None:
                     lam = stats.lam
                 else:
-                    rho_val = float(
-                        fractional_edge_cover(req.query.hypergraph)[0]
-                    )
-                    lam = heavy_parameter(self.p, rho_val)
+                    lam = heavy_parameter(self.p, float(rho(req.query)))
 
             t0 = time.perf_counter()
             if self.backend == "simulator":
@@ -771,13 +794,28 @@ class JoinSession:
                 self._plans.move_to_end(key)
                 req.program = cached.rebind(req.query)
                 self.stats.plan_hits += 1
+                if self.verify:
+                    # warm path: the cached plan was fully verified when it
+                    # was compiled; only the fresh bindings need re-checking.
+                    t0 = time.perf_counter()
+                    verify_bindings(req.program)
+                    req.verify_us = (time.perf_counter() - t0) * 1e6
             else:
                 t0 = time.perf_counter()
                 req.program = compile_plan(
                     req.query, stats, self.p,
                     h_subsets=req.h_subsets, fuse_semijoin=fuse,
+                    verify=False,  # timed separately below
                 )
                 req.compile_us = (time.perf_counter() - t0) * 1e6
+                if self.verify:
+                    t0 = time.perf_counter()
+                    verify_program(
+                        req.program,
+                        caps=getattr(executor, "_learned_caps", None),
+                    )
+                    req.verify_us = (time.perf_counter() - t0) * 1e6
+                    req.verified = True
                 # cache plan metadata only: the concrete relations are rebound
                 # on every hit, so pinning the first submitter's tuple data in
                 # the LRU would retain up to plan_cache_size tables for no
@@ -1032,7 +1070,15 @@ class JoinSession:
                 out.__cause__ = e
                 return out
             return e
-        if isinstance(e, (QueryFailedError, DegradedSessionError, AdmissionError)):
+        if isinstance(
+            e,
+            (
+                QueryFailedError,
+                DegradedSessionError,
+                AdmissionError,
+                ProgramVerificationError,
+            ),
+        ):
             return e
         return QueryFailedError(
             req.query, e, attempt_log=getattr(e, "attempt_log", ())
@@ -1047,8 +1093,11 @@ class JoinSession:
         coalesced: bool,
         deduplicated: bool,
     ) -> SessionResult:
-        total_us = req.stats_us + req.compile_us + execute_us
+        total_us = req.stats_us + req.compile_us + req.verify_us + execute_us
         self.stats.submits += 1
+        if req.verified:
+            self.stats.verified += 1
+        self.stats.verify_us += req.verify_us
         (self.stats.warm_us if req.plan_cache_hit else self.stats.cold_us).append(
             total_us
         )
@@ -1063,6 +1112,8 @@ class JoinSession:
             coalesced=coalesced,
             batch_size=batch_size,
             deduplicated=deduplicated,
+            verified=req.verified,
+            verify_us=req.verify_us,
         )
 
     # -- batch entry ----------------------------------------------------------

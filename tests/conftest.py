@@ -1,0 +1,12 @@
+"""Suite-wide defaults.
+
+Turns compile-time static verification (repro.mpc.verify, gated by the
+``REPRO_VERIFY`` env var — see ``repro.mpc.program._verify_default``) on for
+every test: each ``compile_plan`` call in the suite verifies its output, so
+the whole tier-1 battery doubles as the verifier's zero-false-positive gate.
+An explicit REPRO_VERIFY in the environment still wins (set ``REPRO_VERIFY=0``
+to time the suite without verification)."""
+
+import os
+
+os.environ.setdefault("REPRO_VERIFY", "1")

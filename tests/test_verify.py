@@ -1,0 +1,399 @@
+"""Static verifier + load model: mutation suite, false-positive gate, and the
+mis-planned-program CI gate (docs/design/11-verification.md).
+
+Every mutation test compiles a *good* program, corrupts one invariant, and
+asserts the verifier rejects it with exactly the right rule name — the
+verifier's own regression lock.  The load-bound tests demonstrate the CI
+gate: a correctly planned program sits well inside the symbolic model bound,
+while a deliberately mis-planned one (λ = 2, so a degree-n hub is never
+tagged heavy) blows through it at large p.
+"""
+
+import numpy as np
+import pytest
+from fractions import Fraction
+
+from repro.analysis.loadmodel import predicted_load, round_bounds, round_bounds_by_name
+from repro.core.hypergraph import Hypergraph, rho
+from repro.core.planner import MachineGroup, heavy_parameter
+from repro.core.query import JoinQuery, Relation, pattern_edges, random_query
+from repro.core.taxonomy import compute_stats
+from repro.mpc.cartesian import CartesianGrid
+from repro.mpc.executors import SimulatorExecutor
+from repro.mpc.faults import JoinServiceError, ProgramVerificationError
+from repro.mpc.program import (
+    GridRoute,
+    RouteResidual,
+    SemiJoin,
+    StageGeometry,
+    compile_plan,
+    stage_geometry,
+)
+from repro.mpc.service import JoinSession
+from repro.mpc.verify import (
+    RULES,
+    check_load,
+    check_packed_key,
+    check_stage_geometry,
+    on_cap_grid,
+    verify_bindings,
+    verify_caps,
+    verify_program,
+)
+
+
+def triangle(seed=2, n=200, dom=30, skew=2.0):
+    return random_query(
+        np.random.default_rng(seed), "clique", 3, tuples_per_rel=n, dom_size=dom, skew=skew
+    )
+
+
+def compiled(q=None, p=8, lam=16, fuse=False):
+    q = q if q is not None else triangle()
+    stats = compute_stats(q, lam)
+    return compile_plan(q, stats, p, fuse_semijoin=fuse, verify=False)
+
+
+def hub_triangle(n=1500, seed=3):
+    """Triangle with a degree-n hub value on X0 — worst case for a planner
+    that fails to tag the hub heavy."""
+    rng = np.random.default_rng(seed)
+    rels = []
+    for e in pattern_edges("clique", 3):
+        if e[0] == "X0":
+            data = np.stack([np.zeros(n, np.int64), np.arange(n)], axis=1)
+        elif e[1] == "X0":
+            data = np.stack([np.arange(n), np.zeros(n, np.int64)], axis=1)
+        else:
+            data = rng.integers(0, n, size=(n, 2))
+        rels.append(Relation.make(e, data))
+    return JoinQuery.make(rels)
+
+
+def rule_of(excinfo) -> str:
+    assert isinstance(excinfo.value, ProgramVerificationError)
+    assert isinstance(excinfo.value, JoinServiceError)  # PR 8 taxonomy member
+    assert excinfo.value.rule in RULES
+    return excinfo.value.rule
+
+
+# ---------------------------------------------------------------------------
+# zero false positives on good programs
+# ---------------------------------------------------------------------------
+
+
+def test_good_programs_verify_clean():
+    for fuse in (False, True):
+        prog = compiled(fuse=fuse)
+        rep = verify_program(prog)
+        assert rep.stages == len(prog.stages)
+        assert rep.checks > 0 and rep.geometry_probes > 0
+    # shared-table alias classes (the subgraph-reduction shape) verify clean
+    base = np.random.default_rng(0).integers(0, 20, size=(60, 2))
+    q = JoinQuery.make([
+        Relation.make(("X0", "X1"), base, table="edges"),
+        Relation.make(("X1", "X2"), base, table="edges"),
+        Relation.make(("X0", "X2"), base, table="edges"),
+    ])
+    verify_program(compiled(q=q, lam=8))
+
+
+def test_rho_accepts_query_and_hypergraph():
+    q = triangle()
+    assert rho(q) == rho(q.hypergraph) == Fraction(3, 2)
+    assert rho(Hypergraph.from_edges([("A", "B"), ("B", "C"), ("C", "D"), ("D", "A")])) == 2
+    with pytest.raises(TypeError):
+        rho(42)
+
+
+# ---------------------------------------------------------------------------
+# mutation: op stream (collective-stream / semijoin-fusion)
+# ---------------------------------------------------------------------------
+
+
+def test_dropped_op_caught():
+    prog = compiled()
+    prog.ops = tuple(op for op in prog.ops if not isinstance(op, RouteResidual))
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "collective-stream"
+    assert ei.value.op_round == "step1"
+
+
+def test_duplicated_collective_caught():
+    prog = compiled()
+    prog.ops = prog.ops + (GridRoute(),)
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "collective-stream"
+
+
+def test_reordered_collectives_caught():
+    prog = compiled()
+    ops = list(prog.ops)
+    ops[1], ops[-2] = ops[-2], ops[1]  # RouteResidual <-> GridRoute
+    prog.ops = tuple(ops)
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "collective-stream"
+
+
+def test_broken_semijoin_pair_caught():
+    prog = compiled()
+    prog.ops = tuple(
+        SemiJoin(phase="x") if isinstance(op, SemiJoin) else op for op in prog.ops
+    )
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "semijoin-fusion"
+
+
+def test_fused_flag_without_fused_ops_caught():
+    prog = compiled()
+    prog.fused = True  # ops still carry the unfused ("x", "y") pair
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "semijoin-fusion"
+
+
+# ---------------------------------------------------------------------------
+# mutation: allocations and geometry (grid-invariants / packed-key)
+# ---------------------------------------------------------------------------
+
+
+def test_oversized_step1_group_caught():
+    prog = compiled()
+    st = prog.stages[0]
+    st.cfg.step1_group = MachineGroup(
+        base=st.cfg.step1_group.base, size=prog.p + 5, p=prog.p
+    )
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "grid-invariants"
+    assert ei.value.op_round == "step1"
+
+
+def test_corrupted_m_eta_caught():
+    prog = compiled()
+    prog.stages[0].cfg.m_eta += 7
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "grid-invariants"
+
+
+def test_unstable_group_base_caught():
+    prog = compiled()
+    st = prog.stages[0]
+    st.cfg.step1_group = MachineGroup(
+        base=(st.cfg.step1_group.base + 1) % prog.p,
+        size=st.cfg.step1_group.size,
+        p=prog.p,
+    )
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "grid-invariants"
+
+
+def test_broken_grid_dims_product_caught():
+    prog = compiled()
+    st = next(s for s in prog.stages if s.plan.isolated)
+    geo = stage_geometry(prog, st, {x: [(0, 50)] for x in st.plan.isolated})
+    assert check_stage_geometry(geo, prog.p) > 0  # clean before corruption
+    geo.grid.dims[0] = geo.grid.p + 1  # Π(dims) now exceeds the Lemma 3.1 budget
+    with pytest.raises(ProgramVerificationError) as ei:
+        check_stage_geometry(geo, prog.p)
+    assert rule_of(ei) == "grid-invariants"
+
+
+def test_oversized_cell_space_caught():
+    geo = StageGeometry()
+    big = 1 << 32
+    geo.grid = CartesianGrid([big], big)  # one-list grid: dims = [2^32]
+    geo.step3_group = MachineGroup(base=0, size=big, p=big)
+    with pytest.raises(ProgramVerificationError) as ei:
+        check_stage_geometry(geo, big)
+    assert rule_of(ei) == "packed-key"
+
+
+def test_packed_flag_on_oversized_key_space_caught():
+    check_packed_key(2**10, [2**4, 2**3], packed=True)  # fits int32: fine
+    check_packed_key(2**40, [2**12], packed=False)  # unpacked: exempt
+    with pytest.raises(ProgramVerificationError) as ei:
+        check_packed_key(2**20, [2**12, 2**5], packed=True)
+    assert rule_of(ei) == "packed-key"
+    with pytest.raises(ProgramVerificationError) as ei:
+        check_packed_key(2**4, [-1], packed=True)
+    assert rule_of(ei) == "packed-key"
+
+
+# ---------------------------------------------------------------------------
+# mutation: bindings (scatter-binding)
+# ---------------------------------------------------------------------------
+
+
+def test_alias_class_mismatch_caught():
+    base = np.random.default_rng(0).integers(0, 20, size=(60, 2))
+    other = np.random.default_rng(1).integers(0, 20, size=(60, 2))
+    q = JoinQuery.make([
+        Relation.make(("X0", "X1"), base, table="edges"),
+        Relation.make(("X1", "X2"), base, table="edges"),
+        Relation.make(("X0", "X2"), base, table="edges"),
+    ])
+    prog = compiled(q=q, lam=8)
+    bad = JoinQuery.make([
+        Relation.make(("X0", "X1"), base, table="edges"),
+        Relation.make(("X1", "X2"), other, table="edges"),  # same table, new rows
+        Relation.make(("X0", "X2"), base, table="edges"),
+    ])
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_bindings(prog.rebind(bad))
+    assert rule_of(ei) == "scatter-binding"
+
+
+def test_unbound_cache_entry_caught():
+    from dataclasses import replace
+
+    prog = compiled()
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_bindings(replace(prog, query=None))
+    assert rule_of(ei) == "scatter-binding"
+
+
+def test_emit_machine_out_of_range_caught():
+    prog = compiled()
+    if not prog.emit:
+        prog.emit = [(0, np.zeros((1, len(prog.out_cols)), dtype=np.int64))]
+    mid, row = prog.emit[0]
+    prog.emit[0] = (prog.p + 3, row)
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "scatter-binding"
+    assert ei.value.op_round == "output"
+
+
+# ---------------------------------------------------------------------------
+# caps (cap-grid)
+# ---------------------------------------------------------------------------
+
+
+def test_cap_grid_rule():
+    for good in (16, 24, 32, 48, 64, 96, 1 << 20, 3 << 19):
+        assert on_cap_grid(good), good
+    for bad in (0, 8, 17, 20, 36, 15, 1000):
+        assert not on_cap_grid(bad), bad
+    verify_caps({("k",): {"slot": 64, "out": 24}})
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_caps({("k",): {"slot": 17}})
+    assert rule_of(ei) == "cap-grid"
+
+
+def test_dataplane_learned_caps_stay_on_grid():
+    jax = pytest.importorskip("jax")
+    if len(jax.devices()) < 2:
+        pytest.skip("needs multi-device jax")
+    from repro.mpc.executors import DataplaneExecutor
+    from repro.mpc.program import RunConfig
+
+    q = triangle(n=120, dom=20)
+    ex = DataplaneExecutor()
+    prog = compiled(q=q, p=len(jax.devices()), lam=8)
+    ex.run(prog, config=RunConfig(materialize=True, verify=True))
+    assert ex._learned_caps  # the run learned something
+    verify_caps(ex._learned_caps)  # and all of it is on the quant grid
+    # a second run re-verifies (program + caps) via RunConfig and still passes
+    ex.run(prog, config=RunConfig(materialize=True, verify=True))
+
+
+# ---------------------------------------------------------------------------
+# load-bound: the symbolic model and the mis-planned-program gate
+# ---------------------------------------------------------------------------
+
+
+def test_load_model_shape():
+    prog = compiled()
+    bounds = round_bounds(prog)
+    names = [b.round for b in bounds]
+    assert "step1" in names and "step3-route" in names
+    assert "scatter" not in names and "output" not in names
+    assert all(b.words > 0 and b.formula for b in bounds)
+    assert predicted_load(prog) == pytest.approx(sum(b.words for b in bounds))
+    # semi-join rounds carry the m/λ* skew term on top of the base bound
+    by = round_bounds_by_name(prog)
+    assert by["step2-bx"].words > by["step1"].words
+
+
+def test_well_planned_program_within_load_bound():
+    q = hub_triangle()
+    p = 256
+    lam = heavy_parameter(p, float(rho(q)))
+    stats = compute_stats(q, lam)
+    prog = compile_plan(q, stats, p, verify=False)
+    res = SimulatorExecutor(p=p).run(prog, materialize=False)
+    fractions = check_load(prog, res)  # must not raise
+    assert fractions and max(fractions.values()) < 1.0
+
+
+def test_misplanned_program_fails_load_gate():
+    """The CI gate: λ = 2 never tags the degree-n hub heavy, so the semi-join
+    round concentrates the hub's full edge on one machine — measured load
+    exceeds the Theorem 6.2 model bound and the verifier rejects the run."""
+    q = hub_triangle()
+    p = 256
+    stats = compute_stats(q, 2)  # deliberately mis-planned heavy parameter
+    prog = compile_plan(q, stats, p, verify=False)
+    res = SimulatorExecutor(p=p).run(prog, materialize=False)
+    with pytest.raises(ProgramVerificationError) as ei:
+        check_load(prog, res)
+    assert rule_of(ei) == "load-bound"
+    assert ei.value.op_round in ("step2-bx", "step3-route")
+    # the same measurement also works from a plain {round: load} mapping
+    with pytest.raises(ProgramVerificationError):
+        check_load(prog, res.sim.merged_round_loads())
+
+
+# ---------------------------------------------------------------------------
+# service integration: counters + warm path
+# ---------------------------------------------------------------------------
+
+
+def test_service_verifies_cold_and_rebinds_warm():
+    q = triangle()
+    s = JoinSession(p=4, backend="simulator", verify=True)
+    try:
+        cold = s.submit(q, lam=16)
+        warm = s.submit(q, lam=16)
+        assert cold.verified and not cold.plan_cache_hit
+        assert cold.verify_us > 0
+        assert warm.plan_cache_hit and not warm.verified  # bindings-only re-check
+        assert warm.verify_us < cold.verify_us
+        assert s.stats.verified == 1  # one full verification, not two
+        assert s.stats.verify_us >= cold.verify_us
+        assert cold.total_us == pytest.approx(
+            cold.stats_us + cold.compile_us + cold.verify_us + cold.execute_us
+        )
+    finally:
+        s.close()
+
+
+def test_service_verify_off_is_free():
+    q = triangle()
+    s = JoinSession(p=4, backend="simulator", verify=False)
+    try:
+        r = s.submit(q, lam=16)
+        assert not r.verified and r.verify_us == 0.0
+        assert s.stats.verified == 0 and s.stats.verify_us == 0.0
+    finally:
+        s.close()
+
+
+def test_compile_plan_env_default(monkeypatch):
+    q = triangle()
+    stats = compute_stats(q, 16)
+    prog = compile_plan(q, stats, 8)
+    prog.stages[0].cfg.m_eta += 1  # corrupt, then recompile under each mode
+    monkeypatch.setenv("REPRO_VERIFY", "0")
+    compile_plan(q, stats, 8)  # off: no verification, no raise possible
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    compile_plan(q, stats, 8)  # on + clean program: still fine
+    with pytest.raises(ProgramVerificationError):
+        verify_program(prog)  # the corrupted copy is rejected

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Compile + statically verify the parity-suite query battery — the CI
+`verify` job's fast gate (no device, no execution, pure host-side planning).
+
+Each battery entry mirrors a tests/test_executor_parity.py case (the query
+shapes known to exercise every planner corner: isolated CP grids, ≥2-D grids,
+pure-CP hub stars, disconnected light subqueries, fused programs).  For every
+entry this script compiles the program — unfused and fused — runs the full
+static verifier over it (repro/mpc/verify.py), and prints the per-round
+symbolic load bounds of the model (repro/analysis/loadmodel.py).  Any
+violation raises a typed ProgramVerificationError and exits non-zero.
+
+    PYTHONPATH=src python tools/verify_battery.py
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.analysis.loadmodel import predicted_load
+from repro.core.query import disconnected_query, hub_star_query, random_query
+from repro.core.taxonomy import compute_stats
+from repro.mpc.program import compile_plan
+from repro.mpc.verify import verify_program
+
+P = 8
+
+BATTERY = (
+    ("triangle-zipf", lambda: random_query(
+        np.random.default_rng(2), "clique", 3, tuples_per_rel=200, dom_size=30,
+        skew=2.0), 16),
+    ("four-cycle-2d-iso", lambda: random_query(
+        np.random.default_rng(7), "cycle", 4, tuples_per_rel=120, dom_size=10,
+        skew=2.5), 24),
+    ("hub-star-pure-cp", lambda: hub_star_query(n=48, hub_n=24, dom_size=25), 10),
+    ("disconnected-light", lambda: disconnected_query(90, dom_size=12, skew=1.8), 8),
+    ("star4-fusable", lambda: random_query(
+        np.random.default_rng(4), "star", 4, tuples_per_rel=150, dom_size=12,
+        skew=1.5), 3),
+)
+
+
+def main() -> int:
+    failures = 0
+    for name, make, lam in BATTERY:
+        q = make()
+        stats = compute_stats(q, lam)
+        for fused in (False, True):
+            label = f"{name}{'/fused' if fused else ''}"
+            t0 = time.perf_counter()
+            try:
+                prog = compile_plan(
+                    q, stats, P, fuse_semijoin=fused, verify=False
+                )
+                rep = verify_program(prog)
+            except Exception as e:  # noqa: BLE001 - report and keep scanning
+                failures += 1
+                print(f"FAIL  {label}: {e}")
+                continue
+            us = (time.perf_counter() - t0) * 1e6
+            print(
+                f"ok    {label}: stages={rep.stages} checks={rep.checks} "
+                f"probes={rep.geometry_probes} "
+                f"predicted_load={predicted_load(prog):.0f}w  ({us:.0f}us)"
+            )
+    if failures:
+        print(f"verify_battery: {failures} FAILURES")
+        return 1
+    print("verify_battery: all programs verified clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
