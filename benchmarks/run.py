@@ -18,6 +18,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (
+        bench_acyclic,
         bench_cartesian,
         bench_hypercube,
         bench_isolated_cp,
@@ -42,6 +43,7 @@ def main() -> None:
         ("program_backends", bench_program_backends),  # IR: sim load vs device wall-clock
         ("subgraph", bench_subgraph),            # Sec. 1.4 corollary workload
         ("service", bench_service),              # JoinSession cold vs warm
+        ("acyclic", bench_acyclic),              # general k-ary route cold vs warm
         ("roofline", bench_roofline),            # §Roofline table from dry-run
     ]
 

@@ -38,6 +38,15 @@ Round-specific F:
 broadcasts t_η = |I(η)| piece sizes to the stage's step-3 group, so the bound
 is the static  C·(max_η t_η·p'_η + lg·Σ_η t_η·p'_η / p + lg²).
 
+General-route rounds (arbitrary-arity programs, ``program.general`` set)
+swap m for an explicit volume V: the Yannakakis sweeps ``yan-up``/
+``yan-down`` merge one semijoin per join-tree edge (V = edges·(w+2)·m, w the
+widest arity), and ``hc-route`` replicates each relation across the share
+grid (V = Σ_e m_e·w_e·rep_e over g = Π shares cells) — with LP-optimal
+shares the skew-free per-cell volume collapses to the AGM form
+O(m/p^{1/ρ}).  Both keep the V/λ* skew term: the general route does no
+heavy/light splitting, so its Õ(·) promise assumes λ-bounded frequencies.
+
 The multiplicative constant C (:data:`MODEL_CONSTANT`) is calibrated once
 against the simulator battery (docs/design/11-verification.md has the table):
 well-planned programs across {uniform, zipf} × {triangle, 4-cycle, star} ×
@@ -66,6 +75,9 @@ DATA_ROUNDS = (
     "step2-by",
     "step2-fused",
     "step3-route",
+    "yan-up",
+    "yan-down",
+    "hc-route",
 )
 
 #: Rounds the simulator meters at zero load (host-side placement / local work).
@@ -102,13 +114,43 @@ def round_bounds(program, constant: float = MODEL_CONSTANT) -> List[RoundBound]:
     dev = math.sqrt(max(lstar, 1.0)) * lg
     base = lstar + dev + lg * lg
 
-    # step3-sizes metadata volume, statically from the step-1 allocation.
+    # step3-sizes metadata volume, statically from the step-1 allocation
+    # (binary route only — general programs have no step-3 size round and
+    # their GeneralStage carries no step-1 allocation).
+    gen = getattr(program, "general", None)
     s_max, s_tot = 0.0, 0.0
-    for st in program.stages:
-        t = len(st.plan.isolated)
-        holders = st.cfg.step1_group.size
-        s_max = max(s_max, float(t * holders))
-        s_tot += float(t * holders)
+    if gen is None:
+        for st in program.stages:
+            t = len(st.plan.isolated)
+            holders = st.cfg.step1_group.size
+            s_max = max(s_max, float(t * holders))
+            s_tot += float(t * holders)
+
+    # General-route volumes (metadata only: arities, row counts, shares).
+    # ``yan-up``/``yan-down`` merge one hash-partitioned semijoin per tree
+    # edge into a single logical round, so the sweep bound scales with the
+    # edge count and the widest relation (+1 for the appended key column).
+    # ``hc-route`` replicates each relation Π_{a∉e} share_a times over the
+    # share grid g = Π shares ≤ p; with LP-optimal shares the skew-free
+    # per-cell volume is Σ_e m_e·w_e / Π_{a∈e} share_a — the AGM form
+    # k·w·m/p^{1/ρ} of the Theorem 6.2 headline.
+    sweep_vol = route_vol = 0.0
+    gsize = 1
+    if gen is not None:
+        q = program.query
+        wmax = max(len(rel.scheme) for rel in q.relations) + 1
+        n_edges = max(1, len(gen.tree_edges))
+        shares = dict(gen.shares)
+        for s in shares.values():
+            gsize *= int(s)
+        sweep_vol = float(n_edges) * float(wmax + 1) * float(m)
+        for rel in q.relations:
+            rep = 1
+            for a, s in shares.items():
+                if a not in rel.scheme:
+                    rep *= int(s)
+            route_vol += float(len(rel)) * float(len(rel.scheme) + 1) * float(rep)
+    gdenom = float(max(1, min(p, gsize)))
 
     out: List[RoundBound] = []
     seen = set()
@@ -127,6 +169,26 @@ def round_bounds(program, constant: float = MODEL_CONSTANT) -> List[RoundBound]:
             formula = (
                 f"{constant:g}*(L* + m/lam* + sqrt(L*)*lg + lg^2)"
                 f"  [L*={lstar:.0f}, m/lam*={freq:.0f}, lam*={lam_star}]"
+            )
+        elif name in ("yan-up", "yan-down"):
+            v = sweep_vol
+            words = constant * (
+                v / p + v / lam_star + math.sqrt(max(v / p, 1.0)) * lg + lg * lg
+            )
+            formula = (
+                f"{constant:g}*(V/p + V/lam* + sqrt(V/p)*lg + lg^2)"
+                f"  [V={v:.0f} = edges*(w+2)*m, lam*={lam_star}]"
+            )
+        elif name == "hc-route":
+            v = route_vol
+            words = constant * (
+                v / gdenom + v / lam_star
+                + math.sqrt(max(v / gdenom, 1.0)) * lg + lg * lg
+            )
+            formula = (
+                f"{constant:g}*(V/g + V/lam* + sqrt(V/g)*lg + lg^2)"
+                f"  [V={v:.0f} = sum_e m_e*w_e*rep_e, g={gdenom:.0f}, "
+                f"skew-free ideal m/p^(1/rho)={lstar:.0f}]"
             )
         elif name in ("step1", "step2-unary"):
             words = constant * base

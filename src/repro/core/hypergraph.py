@@ -12,6 +12,11 @@ For binary graphs the LP polytopes have half-integral vertices whose half-weight
 is a disjoint union of odd cycles; the simplex method therefore returns solutions with
 0/1 vertex weights, which we verify (and re-solve with a perturbed objective if a
 degenerate non-vertex optimum sneaks through).
+
+Edges of arbitrary arity (the general-join route) are supported: the LP vertices
+are then rational but not necessarily half-integral, so the solutions are
+recovered as small-denominator fractions (checked for feasibility + optimality)
+instead of the binary half-integral rounding.
 """
 
 from __future__ import annotations
@@ -30,14 +35,18 @@ Edge = FrozenSet[Vertex]
 
 def _as_edge(e) -> Edge:
     e = frozenset(e)
-    if not (1 <= len(e) <= 2):
-        raise ValueError(f"only unary/binary edges supported, got {set(e)}")
+    if len(e) < 1:
+        raise ValueError("edges need at least one vertex")
     return e
 
 
 @dataclass(frozen=True)
 class Hypergraph:
-    """A hypergraph with unary/binary edges; every vertex incident to >= 1 edge."""
+    """A hypergraph with edges of any arity ≥ 1; every vertex incident to >= 1 edge.
+
+    The paper's Theorem 6.2 machinery only consumes unary/binary graphs
+    (``is_binary``); k-ary edges arise from general join queries and feed the
+    GYO/join-tree and HyperCube-shares route."""
 
     vertices: Tuple[Vertex, ...]
     edges: Tuple[Edge, ...]
@@ -96,6 +105,26 @@ def _round_half(x: float) -> Fraction:
     return Fraction(round(x * 2), 2)
 
 
+_GENERAL_DENOMS = (1, 2, 3, 4, 5, 6, 8, 12, 24, 60, 120)
+
+
+def _recover_rational(g: Hypergraph, edges, x, obj: float, cover: bool):
+    """Round a float LP solution to exact Fractions, checked for feasibility and
+    optimality.  Binary graphs have half-integral vertices (the Lemma 2.1 fact
+    the taxonomy relies on); general (k-ary-edge) graphs get a small-denominator
+    search — basic solutions of constant-size LPs have small rational entries."""
+    denoms = (2,) if g.is_binary else _GENERAL_DENOMS
+    for d in denoms:
+        w = {e: Fraction(round(v * d), d) for e, v in zip(edges, x)}
+        total = sum(w.values())
+        if abs(float(total) - obj) > 1e-6:
+            continue
+        vw = _vertex_weights(g, w)
+        if all((vw[v] >= 1 if cover else vw[v] <= 1) for v in g.vertices):
+            return total, w
+    return None
+
+
 def _solve_lp(g: Hypergraph, *, cover: bool, rng_seed: int = 0):
     """Shared LP: cover (minimize, >=1) or packing (maximize, <=1). Returns Fractions."""
     edges = list(g.edges)
@@ -117,17 +146,11 @@ def _solve_lp(g: Hypergraph, *, cover: bool, rng_seed: int = 0):
             res = linprog(-c, A_ub=A, b_ub=np.ones(nv), bounds=(0, 1), method="highs-ds")
         if not res.success:
             raise RuntimeError(f"LP failed on {g}: {res.message}")
-        w = {e: _round_half(x) for e, x in zip(edges, res.x)}
-        # Verify half-integral rounding kept feasibility and optimality.
-        total = sum(w.values())
-        vw = _vertex_weights(g, w)
-        obj = float(sum(res.x)) if cover else float(sum(res.x))
-        if abs(float(total) - obj) > 1e-6:
-            continue
-        ok = all((vw[v] >= 1 if cover else vw[v] <= 1) for v in g.vertices)
-        if ok:
-            return total, w
-    raise RuntimeError(f"could not recover half-integral LP optimum for {g}")
+        obj = float(sum(res.x))
+        recovered = _recover_rational(g, edges, res.x, obj, cover)
+        if recovered is not None:
+            return recovered
+    raise RuntimeError(f"could not recover a rational LP optimum for {g}")
 
 
 def fractional_edge_cover(g: Hypergraph) -> Tuple[Fraction, Dict[Edge, Fraction]]:

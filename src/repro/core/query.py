@@ -1,8 +1,11 @@
 """Relations, join queries, and a reference (oracle) join evaluator.
 
-Data model (paper Sec. 1.1): a relation is a set of tuples over a 2-attribute scheme;
-values live in **dom** (encoded as int64 words). A simple binary query is a set of
-binary relations with pairwise-distinct schemes.
+Data model (paper Sec. 1.1): a relation is a set of tuples over a named scheme;
+values live in **dom** (encoded as int64 words). A simple query is a set of
+relations with pairwise-distinct schemes.  The paper's own algorithm is binary
+(2-attribute schemes); arbitrary-arity relations are accepted and route through
+the general compiler (GYO join trees for acyclic queries, generalized HyperCube
+shares for cyclic ones — see ``repro.core.jointree`` / ``repro.mpc.program``).
 
 The oracle ``reference_join`` computes Join(Q) exactly by pairwise hash joins over an
 order that prefers connected relations (cartesian products only when the remainder is
@@ -83,20 +86,34 @@ class Relation:
 
 @dataclass(frozen=True)
 class JoinQuery:
-    """A simple binary join query: relations with pairwise-distinct binary schemes."""
+    """A simple join query: relations with pairwise-distinct schemes.
+
+    ``force_general`` routes a binary query through the general (join-tree /
+    HyperCube-shares) compiler instead of the paper's Theorem 6.2 pipeline —
+    used to express e.g. a triangle as a generic 3-ary-capable plan.  Queries
+    containing any non-binary relation always take the general route.
+    """
 
     relations: Tuple[Relation, ...]
+    force_general: bool = False
 
     @staticmethod
-    def make(relations: Sequence[Relation]) -> "JoinQuery":
+    def make(
+        relations: Sequence[Relation], force_general: bool = False
+    ) -> "JoinQuery":
         rels = tuple(relations)
         schemes = [r.edge for r in rels]
         if len(set(schemes)) != len(schemes):
             raise ValueError("query is not simple: duplicate schemes")
         for r in rels:
-            if r.arity != 2:
-                raise ValueError("simple binary query requires binary relations")
-        return JoinQuery(relations=rels)
+            if r.arity < 1:
+                raise ValueError("relations need at least one attribute")
+        return JoinQuery(relations=rels, force_general=force_general)
+
+    @property
+    def is_general(self) -> bool:
+        """True when this query must take the general (non-Theorem-6.2) route."""
+        return self.force_general or any(r.arity != 2 for r in self.relations)
 
     @property
     def attset(self) -> Tuple[Attr, ...]:
@@ -162,17 +179,25 @@ def reference_join(query: JoinQuery) -> Relation:
     if not rels:
         raise ValueError("empty query")
     # Greedy connected order: start from the smallest relation, prefer the join
-    # sharing the MOST attributes with the current intermediate (a 2-shared
+    # sharing the MOST attributes with the current intermediate (a multi-shared
     # join filters instead of fanning out — on a clique pattern it closes
     # triangles instead of growing Σ deg^k star intermediates), cartesian
-    # products only when the remainder is disconnected.
+    # products only when the remainder is disconnected.  Ranked over the full
+    # k-ary schemes: shared-attribute count first (any arity, not capped at 2),
+    # then fewest NEW attributes (bounds the intermediate width growth), then
+    # input order for determinism.
     rels.sort(key=len)
     first = rels.pop(0)
     scheme, rows = first.scheme, first.data
     while rels:
+        cur = set(scheme)
         j = max(
             range(len(rels)),
-            key=lambda i: len(set(rels[i].scheme) & set(scheme)) * len(rels) - i,
+            key=lambda i: (
+                len(set(rels[i].scheme) & cur),
+                -len(set(rels[i].scheme) - cur),
+                -i,
+            ),
         )
         scheme, rows = _hash_join(scheme, rows, rels.pop(j))
     out_attrs = query.attset
@@ -206,14 +231,15 @@ def pattern_edges(kind: str, n: int) -> List[Tuple[Attr, Attr]]:
 
 def zipf_relation(
     rng: np.random.Generator,
-    scheme: Tuple[Attr, Attr],
+    scheme: Tuple[Attr, ...],
     n: int,
     dom_size: int,
     skew: float = 0.0,
 ) -> Relation:
-    """n tuples; each column drawn Zipf(skew) over [0, dom_size) (skew=0 → uniform)."""
+    """n tuples; each column drawn Zipf(skew) over [0, dom_size) (skew=0 → uniform).
+    Arity follows ``scheme`` (one sampled column per attribute)."""
     cols = []
-    for _ in range(2):
+    for _ in range(len(scheme)):
         if skew <= 0.0:
             cols.append(rng.integers(0, dom_size, size=n))
         else:
@@ -284,6 +310,96 @@ def hub_star_query(
         planted = np.stack([np.full(hub_n, hub), np.arange(hub_n) + 100], axis=1)
         noise = rng.integers(0, dom_size, size=(n, 2))
         rels.append(Relation.make(("X0", leaf), np.concatenate([planted, noise])))
+    return JoinQuery.make(rels)
+
+
+def general_pattern_schemes(kind: str) -> List[Tuple[Attr, ...]]:
+    """Named arbitrary-arity query families (the general-join workloads).
+
+    * ``star3``     — a 3-ary fact F(A,B,C) with one binary dimension per key:
+                      the smallest k≥3 acyclic shape (TPC-H-ish star).
+    * ``snowflake`` — star3 with one dimension normalized a level deeper.
+    * ``path4``     — four relations chained in a path, mixing arities 2 and 3.
+    * ``triangle``  — the binary triangle (cyclic; pair with force_general to
+                      exercise the generalized HyperCube-shares route).
+    """
+    if kind == "star3":
+        return [("A", "B", "C"), ("A", "A1"), ("B", "B1"), ("C", "C1")]
+    if kind == "snowflake":
+        return [("A", "B", "C"), ("A", "A1"), ("A1", "A2"), ("B", "B1"), ("C", "C1")]
+    if kind == "path4":
+        return [("X0", "X1"), ("X1", "X2", "X3"), ("X3", "X4"), ("X4", "X5", "X6")]
+    if kind == "triangle":
+        return [("X0", "X1"), ("X0", "X2"), ("X1", "X2")]
+    raise ValueError(kind)
+
+
+def general_query(
+    kind: str,
+    n: int,
+    dom_size: int,
+    skew: float = 0.0,
+    seed: int = 7,
+    force_general: bool = True,
+) -> JoinQuery:
+    """Instantiate a `general_pattern_schemes` family with zipf/uniform data."""
+    rng = np.random.default_rng(seed)
+    rels = [
+        zipf_relation(rng, s, n, dom_size, skew)
+        for s in general_pattern_schemes(kind)
+    ]
+    return JoinQuery.make(rels, force_general=force_general)
+
+
+def random_general_query(
+    rng: np.random.Generator,
+    n_rels: int = 3,
+    max_arity: int = 4,
+    n_attrs: int = 5,
+    tuples_per_rel: int = 24,
+    dom_size: int = 8,
+    skew: float = 0.0,
+    share_tables: bool = False,
+    allow_empty: bool = True,
+) -> JoinQuery:
+    """Random k-ary query for the differential harness: arities in [1, max_arity],
+    pairwise-distinct schemes over ``n_attrs`` attributes (acyclic and cyclic
+    shapes both arise), optional shared physical tables between same-scheme-size
+    relations, and occasional empty/singleton relations."""
+    attrs = [f"X{i}" for i in range(n_attrs)]
+    schemes: List[Tuple[Attr, ...]] = []
+    seen = set()
+    guard = 0
+    while len(schemes) < n_rels and guard < 200:
+        guard += 1
+        arity = int(rng.integers(1, max_arity + 1))
+        arity = min(arity, n_attrs)
+        s = tuple(sorted(rng.choice(n_attrs, size=arity, replace=False).tolist()))
+        if s in seen:
+            continue
+        seen.add(s)
+        schemes.append(tuple(attrs[i] for i in s))
+    rels = []
+    shared: Dict[int, Relation] = {}
+    for s in schemes:
+        if allow_empty and rng.random() < 0.08:
+            n = 0
+        elif rng.random() < 0.08:
+            n = 1
+        else:
+            n = int(rng.integers(1, tuples_per_rel + 1))
+        if share_tables and len(s) in shared and rng.random() < 0.5:
+            src = shared[len(s)]
+            rels.append(Relation.make(s, src.data, table=src.table))
+            continue
+        r = zipf_relation(rng, s, n, dom_size, skew)
+        if share_tables:
+            # name by relation index — unique even when several same-arity
+            # relations are generated independently (only the first of each
+            # arity is kept as the reusable shared table)
+            r = Relation.make(s, r.data, table=f"t{len(s)}_{len(rels)}")
+            shared.setdefault(len(s), r)
+        rels.append(r)
     return JoinQuery.make(rels)
 
 

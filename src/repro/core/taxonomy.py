@@ -97,6 +97,15 @@ def compute_stats(
     stats = HeavyStats(lam=lam, m=m, heavy=heavy, cond={}, pair={}, light_cnt={})
     for rel in query.relations:
         e = rel.edge
+        if rel.arity != 2:
+            # general route: only the all-light count is meaningful — the
+            # cond/pair extended records are binary-taxonomy machinery the
+            # general compiler never reads.
+            heavy_any = np.zeros(len(rel), dtype=bool)
+            for attr in rel.scheme:
+                heavy_any |= stats.is_heavy(attr, rel.column(attr))
+            stats.light_cnt[e] = int((~heavy_any).sum())
+            continue
         x_attr, y_attr = rel.scheme
         hx = stats.is_heavy(x_attr, rel.column(x_attr))
         hy = stats.is_heavy(y_attr, rel.column(y_attr))

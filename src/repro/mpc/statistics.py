@@ -41,7 +41,7 @@ def distributed_stats(sim: MPCSimulator, query: JoinQuery, lam: int) -> HeavySta
         size_rows = []
         cand_rows = []
         for rel in query.relations:
-            local = sim.local(mid, ("in", rel.edge))
+            local = sim.local(mid, ("in", rel.edge), arity=rel.arity)
             size_rows.append([eidx[rel.edge], local.shape[0]])
             n_local = local.shape[0]
             if n_local == 0:
@@ -74,10 +74,10 @@ def distributed_stats(sim: MPCSimulator, query: JoinQuery, lam: int) -> HeavySta
     for mid in range(sim.p):
         rows = []
         for rel in query.relations:
-            local = sim.local(mid, ("in", rel.edge))
+            local = sim.local(mid, ("in", rel.edge), arity=rel.arity)
             if local.shape[0] == 0:
                 continue
-            for col in range(2):
+            for col in range(rel.arity):
                 vals, cnts = np.unique(local[:, col], return_counts=True)
                 for v, c in zip(vals.tolist(), cnts.tolist()):
                     key = (eidx[rel.edge], col, v)
@@ -110,10 +110,19 @@ def distributed_stats(sim: MPCSimulator, query: JoinQuery, lam: int) -> HeavySta
     for mid in range(sim.p):
         cond_rows, pair_rows, light_rows = [], [], []
         for rel in query.relations:
-            local = sim.local(mid, ("in", rel.edge))
-            x_attr, y_attr = rel.scheme
+            local = sim.local(mid, ("in", rel.edge), arity=rel.arity)
             if local.shape[0] == 0:
                 continue
+            if rel.arity != 2:
+                # k-ary edges carry no binary cond/pair records (the general
+                # route never reads them) — only the all-light count, exactly
+                # mirroring the centralized compute_stats guard.
+                heavy_any = np.zeros(local.shape[0], dtype=bool)
+                for col, attr in enumerate(rel.scheme):
+                    heavy_any |= stats.is_heavy(attr, local[:, col])
+                light_rows.append([eidx[rel.edge], int((~heavy_any).sum())])
+                continue
+            x_attr, y_attr = rel.scheme
             hx = stats.is_heavy(x_attr, local[:, 0])
             hy = stats.is_heavy(y_attr, local[:, 1])
             light_rows.append([eidx[rel.edge], int((~hx & ~hy).sum())])

@@ -1,0 +1,269 @@
+"""Differential property-test harness for arbitrary-arity joins (the lock on
+the general route — docs/design/12-general-joins.md).
+
+Every case builds a random k-ary query (arities 1–4, acyclic and cyclic
+shapes, shared physical tables, uniform and zipf-skewed data, occasional
+empty/singleton relations), compiles it through the general route, and
+asserts **row-multiset and per-H count parity** against the centralized
+``reference_join`` oracle:
+
+  * simulator battery — ≥ 200 seeded cases (cheap: pure numpy), every one
+    also re-verified statically at compile time (conftest sets REPRO_VERIFY);
+  * dataplane battery — a structured subset under BOTH schedules
+    (stage-batched and ``batch_stages=False``), asserting batched ≡ unbatched
+    byte-identity on top of oracle parity;
+  * the canonical families (star-3, snowflake, path-4, triangle) across
+    skew × emptiness, on both executors;
+  * warm-repeat determinism: same program, same bytes, zero retries and zero
+    executable-cache misses on the second dataplane run.
+
+An optional hypothesis layer re-generates the simulator property when the
+extra is installed; the seeded battery is the CI floor either way.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.query import (
+    JoinQuery,
+    Relation,
+    general_query,
+    random_general_query,
+    reference_join,
+)
+from repro.core.taxonomy import compute_stats
+from repro.mpc.executors import DataplaneExecutor, SimulatorExecutor
+from repro.mpc.program import compile_plan
+
+P = 8
+LAM = 4
+
+
+def rows_key(rows):
+    return sorted(map(tuple, np.asarray(rows).tolist()))
+
+
+def compiled(q, p=P, lam=LAM):
+    stats = compute_stats(q, lam)
+    return compile_plan(q, stats, p)   # REPRO_VERIFY=1 → statically verified
+
+
+def assert_sim_parity(q, p=P):
+    """Simulator vs oracle: row multiset + per-H counts."""
+    prog = compiled(q, p=p)
+    oracle = reference_join(q)
+    sim = SimulatorExecutor(p=p).run(prog)
+    assert sim.count == len(oracle), (sim.count, len(oracle))
+    assert rows_key(sim.rows) == rows_key(oracle.data)
+    if q.is_general:
+        # general route: one catch-all H bucket
+        assert sim.per_h_counts == {("*",): len(oracle)}
+    else:
+        # all-binary queries fall through to the Theorem 6.2 taxonomy route;
+        # its per-H stage counts must still sum to the oracle cardinality
+        assert sum(sim.per_h_counts.values()) == len(oracle)
+    return prog, oracle
+
+
+def assert_dataplane_parity(q, p=P):
+    """Both dataplane schedules vs oracle AND vs each other (byte-identity)."""
+    prog, oracle = assert_sim_parity(q, p=p)
+    dp = DataplaneExecutor(batch_stages=True).run(prog)
+    dp_u = DataplaneExecutor(batch_stages=False).run(prog)
+    assert dp.count == len(oracle), (dp.count, len(oracle))
+    assert rows_key(dp.rows) == rows_key(oracle.data)
+    if q.is_general:
+        assert dp.per_h_counts == {("*",): len(oracle)}
+    else:
+        assert sum(dp.per_h_counts.values()) == len(oracle)
+    assert np.array_equal(dp.rows, dp_u.rows), "batched != unbatched bytes"
+    assert dp_u.per_h_counts == dp.per_h_counts
+    assert dp_u.retries == dp.retries
+    return dp
+
+
+# ---------------------------------------------------------------------------
+# the ≥200-case seeded battery (simulator — the CI volume floor)
+# ---------------------------------------------------------------------------
+
+#: (n_rels, max_arity, n_attrs, tuples, dom, skew, share_tables) — mixed so
+#: the battery covers acyclic + cyclic, shared-table aliases, skew, and the
+#: empty/singleton relations random_general_query injects at ~8% each.
+_BATTERY_SHAPES = [
+    (2, 3, 4, 20, 6, 0.0, False),
+    (3, 3, 5, 24, 8, 0.0, False),
+    (3, 4, 5, 24, 6, 0.9, False),
+    (4, 4, 6, 20, 5, 0.0, True),
+    (4, 3, 5, 16, 4, 1.2, True),
+    (5, 4, 6, 12, 4, 0.0, False),
+    (1, 4, 4, 24, 6, 0.0, False),
+    (3, 2, 4, 24, 6, 0.6, True),
+]
+
+_CASES_PER_SHAPE = 26   # 8 shapes × 26 = 208 ≥ 200 cases
+
+
+@pytest.mark.parametrize("shape_i", range(len(_BATTERY_SHAPES)))
+def test_simulator_differential_battery(shape_i):
+    n_rels, max_ar, n_attrs, tuples, dom, skew, share = _BATTERY_SHAPES[shape_i]
+    rng = np.random.default_rng(1000 + shape_i)
+    for _ in range(_CASES_PER_SHAPE):
+        q = random_general_query(
+            rng, n_rels=n_rels, max_arity=max_ar, n_attrs=n_attrs,
+            tuples_per_rel=tuples, dom_size=dom, skew=skew,
+            share_tables=share, allow_empty=True,
+        )
+        assert_sim_parity(q)
+
+
+# ---------------------------------------------------------------------------
+# canonical families × skew, both executors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["star3", "snowflake", "path4", "triangle"])
+@pytest.mark.parametrize("skew", [0.0, 0.9])
+def test_families_both_executors(kind, skew):
+    q = general_query(kind, n=60, dom_size=6, skew=skew, seed=17)
+    assert_dataplane_parity(q)
+
+
+def test_binary_triangle_forced_general():
+    """The binary triangle through the *general* (cyclic HyperCube) plan —
+    same oracle answer as the taxonomy route it normally takes."""
+    q = general_query("triangle", n=120, dom_size=9, skew=0.7, seed=5)
+    assert q.force_general and q.is_general
+    prog = compiled(q)
+    assert prog.general is not None and prog.general.kind == "hypercube"
+    assert_dataplane_parity(q)
+
+
+# ---------------------------------------------------------------------------
+# dataplane battery: random shapes under both schedules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_dataplane_differential_battery(seed):
+    rng = np.random.default_rng(5000 + seed)
+    q = random_general_query(
+        rng,
+        n_rels=int(rng.integers(1, 5)),
+        max_arity=4,
+        n_attrs=5,
+        tuples_per_rel=20,
+        dom_size=6,
+        skew=float(rng.choice([0.0, 0.8])),
+        share_tables=bool(seed % 3 == 0),
+        allow_empty=True,
+    )
+    assert_dataplane_parity(q)
+
+
+# ---------------------------------------------------------------------------
+# deterministic edge cases, both executors
+# ---------------------------------------------------------------------------
+
+
+def test_empty_relation_empties_join():
+    r1 = Relation.make(("A", "B", "C"), np.array([[1, 2, 3], [2, 3, 4]]))
+    r2 = Relation.make(("C", "D"), np.zeros((0, 2), dtype=np.int64))
+    dp = assert_dataplane_parity(JoinQuery.make([r1, r2]))
+    assert dp.count == 0 and dp.per_h_counts == {("*",): 0}
+
+
+def test_singleton_and_unary():
+    r1 = Relation.make(("A", "B"), np.array([[1, 2]]))
+    r2 = Relation.make(("B",), np.array([[2], [3]]))
+    dp = assert_dataplane_parity(JoinQuery.make([r1, r2]))
+    assert dp.count == 1
+
+
+def test_single_relation_query():
+    q = JoinQuery.make(
+        [Relation.make(("A", "B", "C"), np.array([[1, 2, 3], [4, 5, 6], [1, 1, 1]]))]
+    )
+    dp = assert_dataplane_parity(q)
+    assert dp.count == 3
+
+
+def test_disconnected_components_cartesian():
+    r1 = Relation.make(("A", "B"), np.array([[1, 2], [3, 4]]))
+    r2 = Relation.make(("C", "D", "E"), np.array([[5, 6, 7], [8, 9, 10], [5, 5, 5]]))
+    dp = assert_dataplane_parity(JoinQuery.make([r1, r2]))
+    assert dp.count == 6
+
+
+def test_shared_table_aliases():
+    """Two relations binding one physical table (different schemes) join
+    correctly and verify as one Scatter alias class."""
+    base = np.random.default_rng(3).integers(0, 6, size=(30, 3))
+    q = JoinQuery.make([
+        Relation.make(("A", "B", "C"), base, table="t3"),
+        Relation.make(("B", "C", "D"), base, table="t3"),
+    ])
+    assert_dataplane_parity(q)
+
+
+# ---------------------------------------------------------------------------
+# warm-repeat determinism (the scheduler's steady-state contract)
+# ---------------------------------------------------------------------------
+
+
+def test_warm_repeat_zero_retries_zero_jit_misses():
+    q = general_query("star3", n=80, dom_size=7, skew=0.6, seed=11)
+    prog = compiled(q)
+    ex = DataplaneExecutor(batch_stages=True)
+    r1 = ex.run(prog)
+    r2 = ex.run(prog)
+    assert np.array_equal(r1.rows, r2.rows)
+    assert r2.retries == 0 and r2.jit_cache_misses == 0
+
+
+def test_coalesced_general_byte_identical_to_serial():
+    qa = general_query("star3", n=80, dom_size=7, skew=0.6, seed=11)
+    qb = general_query("star3", n=50, dom_size=5, skew=0.0, seed=23)
+    pa, pb = compiled(qa), compiled(qb)
+    ex = DataplaneExecutor()
+    sa, sb = ex.run(pa), ex.run(pb)
+    ex2 = DataplaneExecutor()
+    (ca, cb), _ = ex2.run_many([pa, pb])
+    assert np.array_equal(ca.rows, sa.rows)
+    assert np.array_equal(cb.rows, sb.rows)
+
+
+# ---------------------------------------------------------------------------
+# optional hypothesis layer (the seeded battery above is the CI floor)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional extra
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_rels=st.integers(1, 5),
+        skew=st.sampled_from([0.0, 0.8]),
+        share=st.booleans(),
+    )
+    def test_hypothesis_simulator_differential(seed, n_rels, skew, share):
+        rng = np.random.default_rng(seed)
+        q = random_general_query(
+            rng, n_rels=n_rels, max_arity=4, n_attrs=5,
+            tuples_per_rel=20, dom_size=6, skew=skew,
+            share_tables=share, allow_empty=True,
+        )
+        assert_sim_parity(q)
+
+else:  # pragma: no cover - optional extra
+
+    @pytest.mark.skip(reason="property test needs the optional hypothesis extra")
+    def test_hypothesis_simulator_differential():
+        pass

@@ -1,0 +1,119 @@
+"""GYO reduction vs brute-force acyclicity + running-intersection property.
+
+`gyo_reduction` is greedy (one fixed ear order); acyclicity is order-independent
+only because GYO is confluent.  The lock here brute-forces ALL ear-removal
+orders (`brute_force_acyclic`) over every ≤5-edge hypergraph shape on 4
+vertices (exhaustive: 4943 edge sets) plus canonical 5-vertex families, and
+asserts the greedy answer matches; for every acyclic instance the derived join
+tree must satisfy the running intersection property directly.
+"""
+
+import itertools
+
+import pytest
+
+from repro.core.jointree import (
+    JoinTree,
+    brute_force_acyclic,
+    build_join_tree,
+    gyo_reduction,
+    is_acyclic,
+    running_intersection_ok,
+)
+
+
+def _all_edge_sets(n_vertices: int, max_edges: int):
+    verts = [f"X{i}" for i in range(n_vertices)]
+    all_edges = []
+    for r in range(1, n_vertices + 1):
+        all_edges += [frozenset(c) for c in itertools.combinations(verts, r)]
+    for k in range(1, max_edges + 1):
+        for combo in itertools.combinations(all_edges, k):
+            yield list(combo)
+
+
+def test_gyo_matches_bruteforce_exhaustive_4v():
+    """Every ≤5-edge hypergraph on 4 vertices: greedy GYO ≡ any-order brute force."""
+    n_acyclic = n_cyclic = 0
+    for schemes in _all_edge_sets(4, 5):
+        greedy = is_acyclic(schemes)
+        brute = brute_force_acyclic(schemes)
+        assert greedy == brute, f"GYO confluence violated on {schemes}"
+        if greedy:
+            n_acyclic += 1
+            tree = build_join_tree(schemes)
+            assert tree is not None
+            assert running_intersection_ok(schemes, tree), schemes
+        else:
+            n_cyclic += 1
+            assert build_join_tree(schemes) is None
+    # sanity: the sweep actually saw both classes
+    assert n_acyclic > 1000 and n_cyclic > 100
+
+
+FIVE_VERTEX_CASES = [
+    # (schemes, expected acyclic)
+    ([("A", "B", "C"), ("A", "A1"), ("B", "B1"), ("C", "C1")], True),  # star3
+    ([("A", "B", "C"), ("A", "A1"), ("A1", "A2"), ("B", "B1"), ("C", "C1")], True),
+    ([("X0", "X1"), ("X1", "X2", "X3"), ("X3", "X4"), ("X4", "X5", "X6")], True),
+    ([("X0", "X1"), ("X1", "X2"), ("X2", "X3"), ("X3", "X4"), ("X4", "X0")], False),
+    ([("X0", "X1"), ("X0", "X2"), ("X1", "X2")], False),  # triangle
+    ([("X0", "X1", "X2"), ("X0", "X1"), ("X1", "X2"), ("X0", "X2")], True),  # covered triangle
+    ([("A", "B"), ("C", "D")], True),  # disconnected forest
+    ([("A", "B"), ("B", "C"), ("C", "A"), ("D", "E")], False),  # cycle + island
+    ([("A",)], True),  # single unary edge
+    ([("A", "B", "C", "D", "E")], True),  # one wide edge
+]
+
+
+@pytest.mark.parametrize("schemes,expected", FIVE_VERTEX_CASES)
+def test_known_families(schemes, expected):
+    schemes = [frozenset(s) for s in schemes]
+    assert is_acyclic(schemes) == expected
+    assert brute_force_acyclic(schemes) == expected
+    tree = build_join_tree(schemes)
+    if expected:
+        assert tree is not None
+        assert running_intersection_ok(schemes, tree)
+    else:
+        assert tree is None
+
+
+def test_gyo_sequence_is_leaves_first():
+    """The recorded removal order is a valid up-sweep: when (c, p, _) fires,
+    c can no longer be any later edge's witness."""
+    schemes = [frozenset(s) for s in
+               [("A", "B", "C"), ("A", "A1"), ("A1", "A2"), ("B", "B1"), ("C", "C1")]]
+    seq = gyo_reduction(schemes)
+    assert seq is not None
+    removed = set()
+    for c, p, shared in seq:
+        assert c not in removed
+        assert p not in removed, "witness already removed — not leaves-first"
+        assert frozenset(shared) == schemes[c] & schemes[p]
+        removed.add(c)
+
+
+def test_running_intersection_rejects_corrupted_tree():
+    """Mutating one tree edge's parent breaks the property (the verify rule's
+    detection primitive)."""
+    schemes = [frozenset(s) for s in
+               [("A", "B", "C"), ("A", "A1"), ("A1", "A2"), ("B", "B1"), ("C", "C1")]]
+    tree = build_join_tree(schemes)
+    assert tree is not None and running_intersection_ok(schemes, tree)
+    # reattach the A1-A2 leaf (index 2) under the B dimension (index 3): the
+    # shared attr A1 no longer appears along the new path
+    bad_edges = tuple(
+        (c, 3 if c == 2 else p, shared) for c, p, shared in tree.edges
+    )
+    bad = JoinTree(n_nodes=tree.n_nodes, root=tree.root, edges=bad_edges)
+    assert not running_intersection_ok(schemes, bad)
+
+
+def test_path_endpoints_and_meet():
+    schemes = [frozenset(s) for s in
+               [("A", "B", "C"), ("A", "A1"), ("A1", "A2"), ("B", "B1"), ("C", "C1")]]
+    tree = build_join_tree(schemes)
+    path = tree.path(2, 4)  # A1A2 leaf to C1 leaf crosses the fact table
+    assert path[0] == 2 and path[-1] == 4
+    assert 0 in path

@@ -11,21 +11,33 @@ tagged heavy) blows through it at large p.
 
 import numpy as np
 import pytest
+from dataclasses import replace
 from fractions import Fraction
 
 from repro.analysis.loadmodel import predicted_load, round_bounds, round_bounds_by_name
 from repro.core.hypergraph import Hypergraph, rho
 from repro.core.planner import MachineGroup, heavy_parameter
-from repro.core.query import JoinQuery, Relation, pattern_edges, random_query
+from repro.core.query import (
+    JoinQuery,
+    Relation,
+    general_query,
+    pattern_edges,
+    random_query,
+)
 from repro.core.taxonomy import compute_stats
 from repro.mpc.cartesian import CartesianGrid
 from repro.mpc.executors import SimulatorExecutor
 from repro.mpc.faults import JoinServiceError, ProgramVerificationError
 from repro.mpc.program import (
+    GENERAL_CYCLIC_OPS,
+    CellJoin,
     GridRoute,
     RouteResidual,
+    Scatter,
     SemiJoin,
+    ShareRoute,
     StageGeometry,
+    TreeSemiJoin,
     compile_plan,
     stage_geometry,
 )
@@ -397,3 +409,111 @@ def test_compile_plan_env_default(monkeypatch):
     compile_plan(q, stats, 8)  # on + clean program: still fine
     with pytest.raises(ProgramVerificationError):
         verify_program(prog)  # the corrupted copy is rejected
+
+
+# ---------------------------------------------------------------------------
+# mutation: general (arbitrary-arity) programs — join-tree / share-exponent
+# ---------------------------------------------------------------------------
+
+
+def general_compiled(kind="star3", p=8, lam=8):
+    q = general_query(kind, n=60, dom_size=6, skew=0.5, seed=9)
+    return compile_plan(q, compute_stats(q, lam), p, verify=False)
+
+
+def test_good_general_programs_verify_clean():
+    for kind in ("star3", "snowflake", "path4", "triangle"):
+        prog = general_compiled(kind)
+        rep = verify_program(prog)
+        assert rep.checks > 0 and rep.geometry_probes == 0
+        want = "hypercube" if kind == "triangle" else "yannakakis"
+        assert prog.general.kind == want
+
+
+def test_corrupted_tree_edge_caught():
+    # reattach the first GYO-removed child under a non-parent leaf: star3's
+    # dimension tables share no attribute, so the edge label can no longer be
+    # the full scheme intersection and the running-intersection property dies
+    prog = general_compiled("star3")
+    gen = prog.general
+    c, par, sh = gen.tree_edges[0]
+    other = next(i for i, _ in enumerate(prog.query.relations)
+                 if i not in (c, par, gen.tree_root))
+    prog.general = replace(
+        gen, tree_edges=((c, other, sh),) + gen.tree_edges[1:]
+    )
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "join-tree"
+
+
+def test_sweep_order_not_leaves_first_caught():
+    # snowflake's GYO order must remove A1-A2 before A-A1; swapping the two
+    # edges makes the up sweep filter a parent before its child was reduced
+    prog = general_compiled("snowflake")
+    gen = prog.general
+    e = list(gen.tree_edges)
+    e[0], e[1] = e[1], e[0]
+    prog.general = replace(gen, tree_edges=tuple(e))
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "join-tree"
+
+
+def test_join_order_child_before_parent_caught():
+    prog = general_compiled("star3")
+    gen = prog.general
+    order = list(gen.join_order)
+    order[0], order[1] = order[1], order[0]  # chain no longer starts at root
+    prog.general = replace(gen, join_order=tuple(order))
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "join-tree"
+
+
+def test_acyclic_demoted_to_cyclic_caught():
+    # pretending star3 is cyclic (dropping the tree, taking the pure
+    # HyperCube route) is wasteful and must not verify
+    prog = general_compiled("star3")
+    prog.general = replace(prog.general, kind="hypercube", tree_edges=())
+    prog.ops = GENERAL_CYCLIC_OPS
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "join-tree"
+
+
+def test_share_product_over_budget_caught():
+    prog = general_compiled("triangle")
+    gen = prog.general
+    prog.general = replace(gen, shares=tuple((a, s * 4) for a, s in gen.shares))
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "share-exponent"
+    assert "exceeds the machine budget" in str(ei.value)
+
+
+def test_budget_legal_but_non_lp_shares_caught():
+    # Π = 8 ≤ p, but (8,1,1) is not the edge-cover LP optimum (2,2,2):
+    # budget-legal tampering must still fail the share-exponent rule
+    prog = general_compiled("triangle")
+    gen = prog.general
+    attrs = [a for a, _ in gen.shares]
+    bad = ((attrs[0], 8),) + tuple((a, 1) for a in attrs[1:])
+    prog.general = replace(gen, shares=bad)
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "share-exponent"
+
+
+def test_general_sweep_out_of_order_caught():
+    prog = general_compiled("star3")
+    prog.ops = (
+        Scatter(),
+        TreeSemiJoin(phase="down"),  # down before up: children filter an
+        TreeSemiJoin(phase="up"),    # unreduced parent — not Yannakakis
+        ShareRoute(),
+        CellJoin(),
+    )
+    with pytest.raises(ProgramVerificationError) as ei:
+        verify_program(prog)
+    assert rule_of(ei) == "collective-stream"
